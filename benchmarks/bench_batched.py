@@ -1,0 +1,25 @@
+"""Table 4 analogue: values-only BR vs conventional D&C compute-and-discard.
+
+cuSOLVER Xstedc(compz='N') computes through the full-eigenvector D&C and
+returns values only -- our `full_discard` baseline reproduces that design
+point (quadratic workspace, full GEMM merges).  Both paths start from d/e
+and share deflation/secular machinery, so the ratio isolates the
+boundary-row state reduction, exactly like the H100 table.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import time_call
+from repro.core import (eigvalsh_tridiagonal_br,
+                        eigvalsh_tridiagonal_full_discard, make_family)
+
+
+def run(report, n=2048):
+    for family in ("uniform", "normal", "toeplitz", "clustered"):
+        d, e = make_family(family, n)
+        t_br = time_call(lambda: eigvalsh_tridiagonal_br(d, e).eigenvalues)
+        t_full = time_call(
+            lambda: eigvalsh_tridiagonal_full_discard(d, e), iters=1)
+        report(f"t4_br_{family}_n{n}", t_br, "")
+        report(f"t4_fulldiscard_{family}_n{n}", t_full,
+               f"full/br={t_full/t_br:.2f}x")

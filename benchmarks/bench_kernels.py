@@ -1,0 +1,33 @@
+"""Kernel microbenchmarks: chunked XLA path vs Pallas interpret mode.
+
+Interpret-mode timings are NOT TPU performance (the body executes in
+Python/XLA-on-CPU); they are recorded to document the validation cost and
+the XLA-path throughput that the paper-style secular solve achieves on CPU.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.core import secular as sec
+from repro.kernels.secular_roots import secular_solve_pallas
+
+
+def run(report, K=2048):
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(np.sort(rng.standard_normal(K)))
+    z = rng.standard_normal(K)
+    z /= np.linalg.norm(z)
+    z2 = jnp.asarray(z * z)
+
+    t_xla = time_call(lambda: sec.secular_solve(d, z2, 0.7, K, niter=16)[1])
+    report(f"kern_secular_xla_K{K}", t_xla,
+           f"{16 * K * K / t_xla / 1e9:.2f} Gterms/s")
+    t_pl = time_call(
+        lambda: secular_solve_pallas(d, z2, jnp.asarray(0.7, d.dtype),
+                                     jnp.asarray(K), niter=16,
+                                     interpret=True)[1], iters=1)
+    report(f"kern_secular_pallas_interpret_K{K}", t_pl, "validation-mode")

@@ -1,0 +1,24 @@
+"""Empirical scaling exponents (paper sections 5.4 / 5.7).
+
+Fits t ~ N^p for BR on deflation-friendly (uniform) and deflation-hostile
+(toeplitz, clustered) families.  The paper's caveat is reproduced: BR is
+*not* claimed sub-quadratic when deflation is weak.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import fit_exponent, time_call
+from repro.core import eigvalsh_tridiagonal_br, make_family
+
+
+def run(report, sizes=(512, 1024, 2048, 4096)):
+    for family in ("uniform", "toeplitz", "clustered"):
+        ts = []
+        for n in sizes:
+            d, e = make_family(family, n)
+            t = time_call(lambda: eigvalsh_tridiagonal_br(d, e).eigenvalues,
+                          iters=2)
+            ts.append(t)
+            report(f"scaling_br_{family}_n{n}", t, "")
+        p = fit_exponent(sizes, ts)
+        report(f"scaling_exponent_{family}", 0.0, f"t~N^{p:.3f}")

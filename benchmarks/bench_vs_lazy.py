@@ -1,0 +1,28 @@
+"""Table 3 analogue: BR vs internal values-only (lazy-replay) D&C.
+
+Output-equivalent paths sharing the same merge core; the ratio isolates
+exactly the replay term (c_rep K^2 reconstruction GEMVs) plus the dense
+local-transform materialization that BR removes.  Workspace columns are
+the analytic models validated in tests.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import time_call
+from repro.core import (eigvalsh_tridiagonal_br, eigvalsh_tridiagonal_lazy,
+                        make_family, workspace_model, workspace_model_lazy)
+
+
+def run(report, sizes=(1024, 2048, 4096)):
+    for family in ("uniform", "normal"):
+        for n in sizes:
+            d, e = make_family(family, n)
+            t_br = time_call(
+                lambda: eigvalsh_tridiagonal_br(d, e).eigenvalues)
+            t_lazy = time_call(lambda: eigvalsh_tridiagonal_lazy(d, e),
+                               iters=1)
+            ws_br = workspace_model(n)["persistent_bytes"] / 2**20
+            ws_lz = workspace_model_lazy(n)["persistent_bytes"] / 2**20
+            report(f"t3_br_{family}_n{n}", t_br, f"ws={ws_br:.2f}MiB")
+            report(f"t3_lazy_{family}_n{n}", t_lazy,
+                   f"ws={ws_lz:.1f}MiB int/br={t_lazy/t_br:.2f}x")

@@ -1,0 +1,34 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Best-of-iters wall time in seconds (matches the paper's protocol:
+    best elapsed over repeated runs for small sizes)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    best = np.inf
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def fit_exponent(ns, ts):
+    """Least-squares slope of log t vs log n."""
+    ns = np.asarray(ns, float)
+    ts = np.asarray(ts, float)
+    A = np.stack([np.log(ns), np.ones_like(ns)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, np.log(ts), rcond=None)
+    return float(coef[0])

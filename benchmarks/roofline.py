@@ -1,0 +1,124 @@
+"""Roofline aggregation: reports/dryrun/*.json -> EXPERIMENTS.md tables.
+
+Per (arch x shape x mesh) cell:
+  compute / memory / collective terms in seconds (per-chip quantities over
+  per-chip rates -- equivalent to total/(chips*rate)), the dominant term,
+  MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per step, and the
+  useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--dir reports/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def model_flops(rep: dict) -> float:
+    """6*N*D per step (training); for inference cells, 2*N*D per generated
+    token (decode) or 2*N*D*tokens (prefill)."""
+    n_active = rep.get("active_params", rep.get("params", 0))
+    tokens = rep["seq_len"] * rep["global_batch"]
+    if rep["kind"] == "train":
+        return 6.0 * n_active * tokens
+    if rep["kind"] == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * rep["global_batch"]     # decode: 1 new token/seq
+
+
+def chips_of(rep: dict) -> int:
+    return 512 if rep.get("multi_pod") else 256
+
+
+def load_reports(directory: str):
+    reports = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            reports.append(json.load(f))
+    return reports
+
+
+def row(rep: dict) -> dict:
+    # Prefer layer-calibrated terms (XLA cost_analysis counts while-loop
+    # bodies once; the dry-run extrapolates metric(L) = base + L*delta).
+    r = rep.get("roofline_calibrated", rep["roofline"])
+    cal = rep.get("calibrated")
+    flops_chip = (cal or rep)["flops_per_chip"]
+    chips = chips_of(rep)
+    mf = model_flops(rep)
+    hlo_total = flops_chip * chips
+    return {
+        "arch": rep["arch"], "shape": rep["shape"],
+        "mesh": "2x16x16" if rep.get("multi_pod") else "16x16",
+        "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"], "dominant": r["dominant"],
+        "roofline_fraction": r["roofline_fraction"],
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "peak_gib": rep["memory"].get("peak_bytes", 0) / 2**30,
+        "compile_s": rep.get("compile_s", 0.0),
+        "calibrated": cal is not None,
+    }
+
+
+def markdown_table(rows, multi_pod: bool = False) -> str:
+    hdr = ("| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+           "| dominant | roofline frac | 6ND/HLO | peak GiB/chip |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if (r["mesh"] == "2x16x16") != multi_pod:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} "
+            f"| {r['peak_gib']:.2f} |")
+    return hdr + "\n".join(lines)
+
+
+def run(report, directory: str = None):
+    directory = directory or os.path.join(
+        os.path.dirname(__file__), "..", "reports", "dryrun")
+    reports = load_reports(directory)
+    if not reports:
+        report("roofline_cells", 0.0, "no dry-run reports found")
+        return
+    rows = [row(r) for r in reports]
+    n_dom = {}
+    for r in rows:
+        n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+    fracs = [r["roofline_fraction"] for r in rows]
+    report("roofline_cells", 0.0,
+           f"cells={len(rows)} dominant={n_dom} "
+           f"frac_min={min(fracs):.2f} frac_max={max(fracs):.2f}")
+    for r in rows:
+        report(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+               f"dom={r['dominant']} frac={r['roofline_fraction']:.2f} "
+               f"useful={r['useful_ratio']:.2f} peak={r['peak_gib']:.1f}GiB")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    directory = args.dir or os.path.join(
+        os.path.dirname(__file__), "..", "reports", "dryrun")
+    rows = [row(r) for r in load_reports(directory)]
+    if args.markdown:
+        print("### Single-pod (16x16)\n")
+        print(markdown_table(rows, multi_pod=False))
+        print("\n### Multi-pod (2x16x16)\n")
+        print(markdown_table(rows, multi_pod=True))
+    else:
+        run(lambda n, s, d: print(f"{n},{s*1e6:.1f},{d}"), directory)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark driver: one module per paper table + roofline aggregation.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes (CI-friendly)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    from benchmarks import (bench_accuracy, bench_batched, bench_kernels,
+                            bench_scaling, bench_vs_lazy, bench_vs_sterf,
+                            bench_workspace, roofline)
+
+    rows = []
+
+    def report(name, seconds, derived=""):
+        line = f"{name},{seconds * 1e6:.1f},{derived}"
+        rows.append(line)
+        print(line, flush=True)
+
+    suites = {
+        "workspace": lambda: bench_workspace.run(report),
+        "vs_sterf": lambda: bench_vs_sterf.run(
+            report, sizes=(512, 1024) if args.quick else (1024, 2048),
+            sterf_max=1024 if args.quick else 2048),
+        "vs_lazy": lambda: bench_vs_lazy.run(
+            report, sizes=(512, 1024) if args.quick else (1024, 2048, 4096)),
+        "batched": lambda: bench_batched.run(
+            report, n=1024 if args.quick else 2048),
+        "scaling": lambda: bench_scaling.run(
+            report, sizes=(256, 512, 1024) if args.quick
+            else (512, 1024, 2048, 4096)),
+        "accuracy": lambda: bench_accuracy.run(
+            report, n=1024 if args.quick else 4096),
+        "kernels": lambda: bench_kernels.run(
+            report, K=512 if args.quick else 2048),
+        "roofline": lambda: roofline.run(report),
+    }
+
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the harness running
+            report(f"{name}_ERROR", 0.0, repr(e))
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+
+    print(f"# total rows: {len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""End-to-end training: a real (reduced) model for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_end_to_end.py            # ~22M params
+    PYTHONPATH=src python examples/train_end_to_end.py --full     # mamba2-130m
+
+Drives the same repro.launch.train stack used at scale: sharded step,
+prefetching pipeline, atomic checkpoints with auto-resume, watchdog,
+straggler stats.  On the CPU container the default config converges
+visibly within ~200 steps.
+"""
+
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="train the full mamba2-130m (TPU-scale) config")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    argv = ["--arch", "mamba2-130m",
+            "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128",
+            "--lr", "1e-3",
+            "--ckpt-dir", "/tmp/repro_e2e_ckpt",
+            "--ckpt-every", "50", "--log-every", "10"]
+    if not args.full:
+        argv.append("--smoke")
+    losses = train_main(argv)
+    print(f"\nfinal loss {losses[-1]:.4f} (started {losses[0]:.4f}) -- "
+          f"{'improved' if losses[-1] < losses[0] else 'NOT improved'}")
+
+
+if __name__ == "__main__":
+    main()

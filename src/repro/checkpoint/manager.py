@@ -1,0 +1,157 @@
+"""Fault-tolerant checkpointing: atomic, checksummed, elastic.
+
+Design (mirrors what production JAX trainers do, without orbax):
+
+  * **Atomic**: write into `step_<k>.tmp/`, fsync, then rename -- a crash
+    mid-write never corrupts the latest valid checkpoint.
+  * **Checksummed**: every leaf gets a CRC32 recorded in manifest.json;
+    restore verifies before handing arrays to the trainer.
+  * **Keep-N**: bounded disk use; the newest `keep` checkpoints survive.
+  * **Auto-resume**: `latest_step()` scans for the newest *valid* manifest
+    (a torn checkpoint is skipped, the previous one restores).
+  * **Elastic reshard-on-load**: leaves are saved as full logical arrays
+    plus the logical PartitionSpec tree; restore takes the *current* mesh
+    and re-applies NamedSharding -- a job checkpointed on (2,16,16) can
+    resume on (16,16) or (4,16,16) unchanged.  (Per-host sharded I/O would
+    slot in at `_gather`/`_put`; single-process here.)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_tree(directory: str, step: int, tree: Any, *, meta: Optional[dict] = None,
+              keep: int = 3) -> str:
+    """Atomically save a pytree checkpoint.  Returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    manifest = {"step": step, "meta": meta or {}, "leaves": {}}
+    for key, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(leaf)
+        fn = key.replace("/", "__") + ".npy"
+        path = os.path.join(tmp, fn)
+        np.save(path, arr)
+        manifest["leaves"][key] = {
+            "file": fn,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    # keep-N garbage collection
+    steps = sorted(all_steps(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+    return final
+
+
+def all_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    while steps:
+        s = steps[-1]
+        try:
+            with open(os.path.join(directory, f"step_{s:08d}",
+                                   "manifest.json")) as f:
+                json.load(f)
+            return s
+        except Exception:
+            steps.pop()   # torn manifest: fall back to previous
+    return None
+
+
+def restore_tree(directory: str, step: int, like: Any, *,
+                 shardings: Any = None, verify: bool = True) -> Any:
+    """Restore a pytree saved by save_tree.
+
+    `like` supplies the tree structure (values ignored).  If `shardings`
+    (matching pytree of NamedSharding) is given, each leaf is device_put
+    with it -- this is the elastic reshard-on-load path.
+    """
+    base = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(base, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    keys = [k for k, _ in _flatten_with_paths(like)]
+    shard_leaves = (_flatten_with_paths(shardings) if shardings is not None
+                    else [(k, None) for k in keys])
+    shard_map = {k: s for k, s in shard_leaves}
+
+    leaves = []
+    for key in keys:
+        entry = manifest["leaves"][key]
+        arr = np.load(os.path.join(base, entry["file"]))
+        if verify:
+            crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+            if crc != entry["crc32"]:
+                raise IOError(f"checksum mismatch for {key} in {base}")
+        sh = shard_map.get(key)
+        leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+
+    tdef = jax.tree.structure(like)
+    return tdef.unflatten(leaves), manifest["meta"]
+
+
+class CheckpointManager:
+    """Step-driven wrapper: save every `period`, auto-resume from latest."""
+
+    def __init__(self, directory: str, *, period: int = 100, keep: int = 3):
+        self.directory = directory
+        self.period = period
+        self.keep = keep
+
+    def maybe_save(self, step: int, tree: Any, meta: Optional[dict] = None):
+        if step % self.period == 0:
+            return save_tree(self.directory, step, tree, meta=meta,
+                             keep=self.keep)
+        return None
+
+    def resume(self, like: Any, shardings: Any = None):
+        """Returns (tree, meta, step) or (None, None, 0) if fresh."""
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None, 0
+        tree, meta = restore_tree(self.directory, step, like,
+                                  shardings=shardings)
+        return tree, meta, step

@@ -1,0 +1,45 @@
+"""repro.core -- boundary-row D&C eigenvalue-only tridiagonal eigensolver.
+
+The paper's contribution (BR) plus the three baselines it is evaluated
+against, all sharing one merge core so exact-arithmetic equivalence
+(paper Theorem 3.3) holds by construction.
+"""
+
+from repro.core.api import eigvalsh_tridiagonal, METHODS
+from repro.core.br_dc import (
+    BRResult,
+    eigvalsh_tridiagonal_br,
+    workspace_model,
+)
+from repro.core.sterf import eigvalsh_tridiagonal_sterf
+from repro.core.baselines import (
+    eig_tridiagonal_full_dc,
+    eigvalsh_tridiagonal_full_discard,
+    eigvalsh_tridiagonal_lazy,
+    workspace_model_full,
+    workspace_model_lazy,
+    workspace_model_sterf,
+)
+from repro.core.secular import (
+    boundary_rows_update,
+    secular_eigenvalues,
+    secular_solve,
+    zhat_reconstruct,
+)
+from repro.core.tridiag import (
+    FAMILIES,
+    dense_from_tridiag,
+    gershgorin_bounds,
+    make_family,
+)
+
+__all__ = [
+    "BRResult", "FAMILIES", "METHODS",
+    "boundary_rows_update", "dense_from_tridiag",
+    "eig_tridiagonal_full_dc", "eigvalsh_tridiagonal",
+    "eigvalsh_tridiagonal_br", "eigvalsh_tridiagonal_full_discard",
+    "eigvalsh_tridiagonal_lazy", "eigvalsh_tridiagonal_sterf",
+    "gershgorin_bounds", "make_family", "secular_eigenvalues",
+    "secular_solve", "workspace_model", "workspace_model_full",
+    "workspace_model_lazy", "workspace_model_sterf", "zhat_reconstruct",
+]

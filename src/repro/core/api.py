@@ -1,0 +1,34 @@
+"""Public eigensolver API.
+
+    from repro.core import eigvalsh_tridiagonal
+    lam = eigvalsh_tridiagonal(d, e)                    # BR (paper), O(n) memory
+    lam = eigvalsh_tridiagonal(d, e, method="sterf")    # QR/QL baseline
+    lam = eigvalsh_tridiagonal(d, e, method="lazy")     # internal values-only D&C
+    lam = eigvalsh_tridiagonal(d, e, method="full")     # conventional D&C (discard Q)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.br_dc import eigvalsh_tridiagonal_br
+from repro.core.sterf import eigvalsh_tridiagonal_sterf
+from repro.core import baselines as _bl
+
+METHODS = ("br", "sterf", "lazy", "full", "eigh")
+
+
+def eigvalsh_tridiagonal(d, e, method: str = "br", **kw):
+    """All eigenvalues (ascending) of the symmetric tridiagonal (d, e)."""
+    if method == "br":
+        return eigvalsh_tridiagonal_br(d, e, **kw).eigenvalues
+    if method == "sterf":
+        return eigvalsh_tridiagonal_sterf(d, e, **kw)
+    if method == "lazy":
+        return _bl.eigvalsh_tridiagonal_lazy(d, e, **kw)
+    if method == "full":
+        return _bl.eigvalsh_tridiagonal_full_discard(d, e, **kw)
+    if method == "eigh":
+        from repro.core.tridiag import dense_from_tridiag
+        return jnp.linalg.eigvalsh(dense_from_tridiag(d, e))
+    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")

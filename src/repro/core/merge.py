@@ -1,0 +1,196 @@
+"""One boundary-row D&C merge (paper Algorithm 1, lines 5-11), masked/fixed-shape.
+
+Given two solved children (their spectra plus the boundary rows of their
+eigenvector matrices) and the rank-one coupling (rho, s), produce the parent
+spectrum and the parent's selected rows:
+
+    z      = [ bhi(Q_L) ; s * blo(Q_R) ]          (Lemma 3.1)
+    parent = eig( diag(LamL (+) LamR) + rho z z^T )
+    R_new  = R_child @ S_v  via selected-row streaming  (Lemma 3.2)
+
+The deflation pipeline mirrors LAPACK DLAED2 exactly (z-small test, then the
+sequential close-pole Givens chain with the same (c, s) convention and
+diagonal-value updates), but in a fixed-shape masked formulation: deflation
+yields a compaction permutation + a traced active count K', never a dynamic
+shape.  This is the XLA/TPU adaptation recorded in DESIGN.md -- semantics are
+preserved, shapes are static.
+
+The same `merge_node` serves three algorithms (DESIGN.md section 2):
+  * BR (paper):       R has 2 rows -> O(n) persistent state.
+  * full-vector D&C:  R has K rows = Q_L (+) Q_R  -> conventional quadratic.
+  * lazy-replay:      R = I_K extracts the dense local transform S_v for
+                      later replay (the paper's internal values-only baseline).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import secular as _sec
+
+
+class MergeResult(NamedTuple):
+    lam: jax.Array        # (K,) parent eigenvalues, ascending
+    rows: jax.Array       # (r, K) updated selected rows (zeros in root mode)
+    kprime: jax.Array     # () int32 active secular rank after deflation
+    rho_eff: jax.Array    # () effective rank-one strength (>= 0)
+
+
+def _deflate_tolerance(d, z, rho_eff, tol_factor):
+    dmax = jnp.max(jnp.abs(d))
+    return tol_factor * jnp.finfo(d.dtype).eps * jnp.maximum(dmax, rho_eff)
+
+
+def _close_pole_scan(d, z, R, small, tol):
+    """Sequential close-pole deflation chain (LAPACK DLAED2 lines ~230-280).
+
+    Walks the sorted poles carrying the last *kept* entry; when the current
+    pole is within tolerance of it (measured by the rotated off-diagonal
+    |t*c*s|), applies the Givens rotation that zeroes the previous z entry,
+    updates both diagonal values, and marks the previous column deflated.
+
+    Rotations touch only z, d and the r selected rows (paper Lemma A.2).
+    Returns updated (d, z, R, deflated_mask).
+    """
+    r, K = R.shape
+    dtype = d.dtype
+
+    def step(carry, i):
+        d_arr, z_arr, Rc, defl, pd, pz, pidx, pvalid = carry
+        d_i = d_arr[i]
+        z_i = z_arr[i]
+        small_i = small[i]
+
+        tau_g = jnp.hypot(pz, z_i)
+        tau_safe = jnp.where(tau_g > 0.0, tau_g, 1.0)
+        c = z_i / tau_safe          # LAPACK: C = Z(NJ)/TAU
+        s_g = -pz / tau_safe        # LAPACK: S = -Z(PJ)/TAU
+        t = d_i - pd
+        close = pvalid & (~small_i) & (jnp.abs(t * c * s_g) <= tol) & (tau_g > 0.0)
+
+        # Rotated diagonal values (weighted averages of the close pair).
+        d_p_new = pd * c * c + d_i * s_g * s_g
+        d_i_new = pd * s_g * s_g + d_i * c * c
+
+        # Column rotation on the selected rows (drot with (c, s_g)):
+        #   col_p <- c*col_p + s_g*col_i ; col_i <- -s_g*col_p + c*col_i
+        pidx_safe = jnp.maximum(pidx, 0)
+        col_p = Rc[:, pidx_safe]
+        col_i = Rc[:, i]
+        new_p = c * col_p + s_g * col_i
+        new_i = -s_g * col_p + c * col_i
+
+        def apply_close(args):
+            d_arr, z_arr, Rc, defl = args
+            d_arr = d_arr.at[pidx_safe].set(d_p_new).at[i].set(d_i_new)
+            z_arr = z_arr.at[pidx_safe].set(0.0).at[i].set(tau_g)
+            Rc = Rc.at[:, pidx_safe].set(new_p).at[:, i].set(new_i)
+            defl = defl.at[pidx_safe].set(True)
+            return d_arr, z_arr, Rc, defl
+
+        d_arr, z_arr, Rc, defl = jax.lax.cond(
+            close, apply_close, lambda a: a, (d_arr, z_arr, Rc, defl))
+
+        # Carry the current entry forward as the new "last kept" unless it
+        # was z-small deflated (then the previous kept entry persists).
+        keep_cur = ~small_i
+        npd = jnp.where(keep_cur, jnp.where(close, d_i_new, d_i), pd)
+        npz = jnp.where(keep_cur, jnp.where(close, tau_g, z_i), pz)
+        npidx = jnp.where(keep_cur, i, pidx)
+        npvalid = pvalid | keep_cur
+        return (d_arr, z_arr, Rc, defl, npd, npz, npidx, npvalid), None
+
+    defl0 = jnp.asarray(small)
+    init = (d, z, R, defl0,
+            jnp.asarray(0.0, dtype), jnp.asarray(0.0, dtype),
+            jnp.asarray(-1, jnp.int32), jnp.asarray(False))
+    (d, z, R, defl, *_), _ = jax.lax.scan(step, init, jnp.arange(K, dtype=jnp.int32))
+    return d, z, R, defl
+
+
+def merge_node(dL, dR, zL, zR, R, rho, sgn, *,
+               niter: int = 16, chunk: int = 256, use_zhat: bool = True,
+               root_mode: bool = False, tol_factor: float = 8.0) -> MergeResult:
+    """Merge one pair of solved children.  See module docstring.
+
+    Args:
+      dL, dR: (M,) ascending child eigenvalues.
+      zL: (M,) bhi(Q_L) -- last row of the left child's eigenvector matrix.
+      zR: (M,) blo(Q_R) -- first row of the right child's.
+      R:  (r, K=2M) selected child rows, columns aligned to [L cols, R cols].
+      rho: scalar >= 0, |e| at the split.
+      sgn: +-1.0, sign of the split off-diagonal (absorbed into z, Eq. 3).
+      root_mode: skip all row propagation (paper's root-only mode).
+    """
+    K = dL.shape[0] + dR.shape[0]
+    dtype = dL.dtype
+
+    d0 = jnp.concatenate([dL, dR])
+    z0 = jnp.concatenate([zL, sgn * zR])
+    nrm2 = jnp.sum(z0 * z0)
+    nrm = jnp.sqrt(nrm2)
+    z = z0 / jnp.where(nrm > 0.0, nrm, 1.0)
+    rho_eff = rho * nrm2  # so that rho * z0 z0^T == rho_eff * z z^T, ||z|| = 1
+
+    # ---- sort poles ascending -------------------------------------------
+    p1 = jnp.argsort(d0)
+    d = d0[p1]
+    z = z[p1]
+    R = R[:, p1]
+
+    tol = _deflate_tolerance(d, z, rho_eff, tol_factor)
+
+    # ---- type-1 deflation: negligible z entries -------------------------
+    small = rho_eff * jnp.abs(z) <= tol
+    z = jnp.where(small, 0.0, z)
+
+    # ---- type-2 deflation: close poles (sequential Givens chain) --------
+    d, z, R, deflated = _close_pole_scan(d, z, R, small, tol)
+    z = jnp.where(deflated, 0.0, z)
+
+    # ---- compaction: active first (sorted), deflated after --------------
+    p2 = jnp.lexsort((d, deflated))
+    d = d[p2]
+    z = z[p2]
+    R = R[:, p2]
+    deflated = deflated[p2]
+    kprime = (K - jnp.sum(deflated)).astype(jnp.int32)
+
+    # ---- secular root solve (compact delta representation) --------------
+    origin, tau = _sec.secular_solve(d, z * z, rho_eff, kprime,
+                                     niter=niter, chunk=chunk)
+    lam = d[origin] + tau
+
+    # ---- selected-row propagation (skipped at the root) ------------------
+    if root_mode:
+        rows = jnp.zeros_like(R)
+    else:
+        zr = z
+        if use_zhat:
+            zr = _sec.zhat_reconstruct(d, z, origin, tau, kprime, rho_eff,
+                                       chunk=chunk)
+        rows = _sec.boundary_rows_update(R, d, zr, origin, tau, kprime,
+                                         chunk=chunk)
+
+    # ---- final ascending sort of the parent spectrum ---------------------
+    p3 = jnp.argsort(lam)
+    lam = lam[p3]
+    rows = rows[:, p3] if not root_mode else rows
+
+    return MergeResult(lam.astype(dtype), rows, kprime, rho_eff)
+
+
+def merge_level(lam_pairs, z_inner, R, rho, sgn, **kw):
+    """vmapped merge across all independent nodes of one tree level.
+
+    lam_pairs: (B, 2, M) child spectra; z_inner: (B, 2, M) = (bhi_L, blo_R);
+    R: (B, r, 2M); rho, sgn: (B,).
+    """
+    fn = functools.partial(merge_node, **kw)
+    return jax.vmap(
+        lambda lp, zi, r_, rh, sg: fn(lp[0], lp[1], zi[0], zi[1], r_, rh, sg)
+    )(lam_pairs, z_inner, R, rho, sgn)

@@ -1,0 +1,136 @@
+"""Eigenvalue-only QR/QL baseline (LAPACK xSTERF analogue) in JAX.
+
+Classic implicit-shift QL iteration on the (d, e) arrays only -- the
+lowest-memory eigenvalue-only tridiagonal solver and the paper's primary
+CPU baseline (Table 2).  The computation is inherently sequential: an outer
+while-loop peels off converged eigenvalues; each QL sweep is a reverse scan
+over the active block.  We implement it with fixed-shape masked sweeps
+(`lax.scan` over the full array, masked to [l, m]), which preserves the
+algorithm's O(n^2) total work while staying jit-compatible.
+
+This is a *baseline*: it intentionally exposes no coarse-grained
+parallelism, exactly the property the paper's BR algorithm removes the need
+to accept.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _ql_sweep(d, e, l, m):
+    """One implicit-shift QL sweep on block [l, m] (NR `tqli` inner loop).
+
+    Masked fixed-shape version: iterates i = m-1 down to 0, only indices in
+    [l, m-1] take effect.  Returns updated (d, e).
+    """
+    n = d.shape[0]
+    dtype = d.dtype
+
+    # Wilkinson-style shift from the top 2x2 of the block (QL convention).
+    # NR tqli: g = d[m] - d[l] + e[l] / (g0 + sign(r0, g0)) is the *initial
+    # rotation argument* fed to the bulge chase, not a value to re-subtract.
+    d_l = d[l]
+    d_l1 = d[jnp.minimum(l + 1, n - 1)]
+    e_l = e[l]
+    g0 = (d_l1 - d_l) / (2.0 * jnp.where(e_l == 0.0, 1.0, e_l))
+    r0 = jnp.hypot(g0, jnp.asarray(1.0, dtype))
+    denom = g0 + jnp.where(g0 >= 0.0, r0, -r0)
+    g_init = d[m] - d_l + e_l / jnp.where(denom == 0.0, 1.0, denom)
+
+    def body(carry, i):
+        d_c, e_c, g, s, c, p, done = carry
+        inside = (i >= l) & (i <= m - 1) & (~done)
+
+        f = s * e_c[i]
+        b = c * e_c[i]
+        r = jnp.hypot(f, g)
+        # e[i+1] <- r (store rotation result above)
+        e_c = jnp.where(inside, e_c.at[i + 1].set(r), e_c)
+        zero_r = inside & (r == 0.0)
+        # r == 0: premature deflation -- d[i+1] -= p; e[m] = 0; stop sweep.
+        d_c = jnp.where(zero_r, d_c.at[i + 1].add(-p), d_c)
+        e_c = jnp.where(zero_r, e_c.at[m].set(0.0), e_c)
+        done = done | zero_r
+
+        r_safe = jnp.where(r == 0.0, 1.0, r)
+        s_n = jnp.where(inside, f / r_safe, s)
+        c_n = jnp.where(inside, g / r_safe, c)
+        g_n = d_c[i + 1] - p
+        r2 = (d_c[i] - g_n) * s_n + 2.0 * c_n * b
+        p_n = s_n * r2
+        d_c = jnp.where(inside & ~zero_r, d_c.at[i + 1].set(g_n + p_n), d_c)
+        g2 = c_n * r2 - b
+
+        s = jnp.where(inside & ~zero_r, s_n, s)
+        c = jnp.where(inside & ~zero_r, c_n, c)
+        p = jnp.where(inside & ~zero_r, p_n, p)
+        g = jnp.where(inside & ~zero_r, g2, g)
+        return (d_c, e_c, g, s, c, p, done), None
+
+    init = (d, e, g_init, jnp.asarray(1.0, dtype), jnp.asarray(1.0, dtype),
+            jnp.asarray(0.0, dtype), jnp.asarray(False))
+    idx = jnp.arange(n - 1, -1, -1)
+    (d, e, g, s, c, p, done), _ = jax.lax.scan(body, init, idx)
+
+    d = jnp.where(~done, d.at[l].add(-p), d)
+    e = jnp.where(~done, e.at[l].set(g), e)
+    e = jnp.where(~done, e.at[m].set(0.0), e)
+    return d, e
+
+
+@functools.partial(jax.jit, static_argnames=("max_sweeps_per_eig",))
+def _sterf_jit(d, e_in, max_sweeps_per_eig: int = 30):
+    n = d.shape[0]
+    dtype = d.dtype
+    # e padded to length n; e[n-1] is a permanent zero sentinel.
+    e = jnp.zeros((n,), dtype).at[: n - 1].set(e_in)
+    eps = jnp.finfo(dtype).eps
+
+    def find_m(d, e, l):
+        """Smallest m >= l with negligible e[m] (converged split point)."""
+        i = jnp.arange(n)
+        thresh = eps * (jnp.abs(d) + jnp.abs(jnp.roll(d, -1)))
+        negligible = (jnp.abs(e) <= thresh) | (i >= n - 1)
+        cand = jnp.where((i >= l) & negligible, i, n)
+        return jnp.min(cand)
+
+    def cond(state):
+        d, e, l, it = state
+        return (l < n) & (it < max_sweeps_per_eig * n)
+
+    def body(state):
+        d, e, l, it = state
+        m = find_m(d, e, l)
+
+        def converged(args):
+            d, e, l = args
+            return d, e, l + 1
+
+        def sweep(args):
+            d, e, l = args
+            d, e = _ql_sweep(d, e, l, m)
+            return d, e, l
+
+        d, e, l = jax.lax.cond(m == l, converged, sweep, (d, e, l))
+        return d, e, l, it + 1
+
+    d, e, l, it = jax.lax.while_loop(
+        cond, body, (d, e, jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32)))
+    return jnp.sort(d), it
+
+
+def eigvalsh_tridiagonal_sterf(d, e, *, dtype=None):
+    """All eigenvalues of (d, e) via sequential implicit-shift QL."""
+    d = jnp.asarray(d)
+    e = jnp.asarray(e)
+    if dtype is not None:
+        d = d.astype(dtype)
+        e = e.astype(dtype)
+    if d.shape[0] == 1:
+        return d
+    lam, _ = _sterf_jit(d, e)
+    return lam

@@ -1,0 +1,77 @@
+"""Symmetric tridiagonal matrix utilities and the paper's test families.
+
+The four spectral families follow the paper's Section 5.1 exactly:
+  uniform:   d ~ U[-1, 1],   e ~ U[0.10, 0.30]
+  normal:    d ~ N(0, 1),    e ~ U[0.10, 0.30]
+  toeplitz:  d = 2,          e = 0.25
+  clustered: d = 1 + 1e-12*(i - (n+1)/2),  e = 1e-4*(1 + 0.1*cos(0.33*i))
+
+Fixed seeds keyed by (family, n) make every matrix exactly reproducible,
+mirroring the paper's xorshift convention.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def dense_from_tridiag(d, e):
+    """Materialize the dense symmetric matrix (test/oracle use only)."""
+    d = jnp.asarray(d)
+    e = jnp.asarray(e)
+    n = d.shape[0]
+    A = jnp.zeros((n, n), d.dtype)
+    A = A.at[jnp.arange(n), jnp.arange(n)].set(d)
+    if n > 1:
+        i = jnp.arange(n - 1)
+        A = A.at[i, i + 1].set(e).at[i + 1, i].set(e)
+    return A
+
+
+def gershgorin_bounds(d, e):
+    """(lo, hi) enclosing all eigenvalues."""
+    d = jnp.asarray(d)
+    e = jnp.asarray(e)
+    n = d.shape[0]
+    if n == 1:
+        return d[0], d[0]
+    radius = jnp.zeros(n, d.dtype)
+    radius = radius.at[:-1].add(jnp.abs(e)).at[1:].add(jnp.abs(e))
+    return jnp.min(d - radius), jnp.max(d + radius)
+
+
+def _seed_for(family: str, n: int) -> int:
+    return (hash(family) ^ (n * 0x9E3779B9)) & 0x7FFFFFFF
+
+
+def make_family(family: str, n: int, dtype=np.float64, seed: int | None = None):
+    """Generate (d, e) for one of the paper's test families (numpy arrays)."""
+    if seed is None:
+        seed = _seed_for(family, n)
+    rng = np.random.default_rng(seed)
+    i = np.arange(1, n + 1, dtype=np.float64)
+    if family == "uniform":
+        d = rng.uniform(-1.0, 1.0, n)
+        e = rng.uniform(0.10, 0.30, n - 1)
+    elif family == "normal":
+        d = rng.standard_normal(n)
+        e = rng.uniform(0.10, 0.30, n - 1)
+    elif family == "toeplitz":
+        d = np.full(n, 2.0)
+        e = np.full(n - 1, 0.25)
+    elif family == "clustered":
+        d = 1.0 + 1e-12 * (i - (n + 1) / 2.0)
+        e = 1e-4 * (1.0 + 0.1 * np.cos(0.33 * i[:-1]))
+    elif family == "wilkinson":
+        # W_n^+ : classic near-degenerate stress matrix (extra coverage).
+        m = (n - 1) / 2.0
+        d = np.abs(i - 1 - m)
+        e = np.ones(n - 1)
+    else:
+        raise ValueError(f"unknown family: {family}")
+    return d.astype(dtype), e.astype(dtype)
+
+
+FAMILIES = ("uniform", "normal", "toeplitz", "clustered", "wilkinson")

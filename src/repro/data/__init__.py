@@ -1,0 +1,4 @@
+from repro.data.pipeline import DataPipeline, synthetic_batch_specs
+from repro.data.synthetic import SyntheticTokens
+
+__all__ = ["DataPipeline", "SyntheticTokens", "synthetic_batch_specs"]

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: streamed selected-row (boundary-row) update.
+
+The paper's key GPU kernel (Section 4.1): for every active secular root j,
+
+    R_parent(:, j) = R_child @ y_j,
+    y_j(i) = (z_i / ((d_i - d_org_j) - tau_j)) / ||.||
+
+with R_child holding at most two selected rows -- "each column update is
+reduced to two streamed dot products".  The dense K x K secular eigenvector
+block Y is never materialized; that is precisely the O(n^2) -> O(n) claim.
+
+TPU mapping: grid over root blocks; R (r, K), d, z, d_org, tau resident in
+VMEM (all O(K)); the (ROOT_BLOCK, POLE_TILE) y-slab is the only 2-D
+temporary.  The r x T @ T x C contraction per tile feeds the VPU (r = 2) --
+the MXU is irrelevant at r = 2, which matches the paper's observation that
+this kernel is bandwidth-, not FLOP-, bound.
+
+Deflated columns (j >= kprime) pass through unchanged (paper: permutations
+applied to metadata only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROOT_BLOCK = 128
+DEFAULT_POLE_TILE = 1024
+
+
+def _boundary_kernel(R_ref, d_ref, z_ref, dorg_ref, tau_ref, kprime_ref,
+                     out_ref, *, pole_tile):
+    r, K = R_ref.shape
+    C = out_ref.shape[1]
+    T = min(pole_tile, K)
+    num_tiles = (K + T - 1) // T
+    dtype = R_ref.dtype
+
+    d = d_ref[...]
+    z = z_ref[...]
+    kprime = kprime_ref[0]
+
+    i = pl.program_id(0)
+    jc = i * C + jax.lax.iota(jnp.int32, C)
+    jc_safe = jnp.minimum(jc, K - 1)
+    active_j = jc < kprime
+
+    d_org = dorg_ref[...][jc_safe]
+    tau = tau_ref[...][jc_safe]
+
+    def body(t, acc):
+        cols_acc, nrm_acc = acc
+        start = t * T
+        dt = jax.lax.dynamic_slice(d, (start,), (T,))
+        zt = jax.lax.dynamic_slice(z, (start,), (T,))
+        Rt = jax.lax.dynamic_slice(R_ref[...], (jnp.zeros((), start.dtype), start), (r, T))
+        it = start + jax.lax.iota(jnp.int32, T)
+        delta = (dt[None, :] - d_org[:, None]) - tau[:, None]     # (C, T)
+        ok = (it < kprime)[None, :] & (delta != 0.0)
+        y = jnp.where(ok, zt[None, :] / jnp.where(ok, delta, 1.0), 0.0)
+        nrm_acc = nrm_acc + jnp.sum(y * y, axis=-1)               # (C,)
+        cols_acc = cols_acc + jax.lax.dot_general(
+            Rt, y, (((1,), (1,)), ((), ())),
+            preferred_element_type=dtype)                          # (r, C)
+        return cols_acc, nrm_acc
+
+    cols0 = jnp.zeros((r, C), dtype)
+    nrm0 = jnp.zeros((C,), dtype)
+    cols, nrm2 = jax.lax.fori_loop(0, num_tiles, body, (cols0, nrm0))
+    nrm = jnp.sqrt(nrm2)
+    cols = cols / jnp.where(nrm > 0.0, nrm, 1.0)[None, :]
+
+    # Deflated columns pass through.
+    Rsel = jax.lax.dynamic_slice(
+        R_ref[...], (jnp.zeros((), jnp.int32), jnp.asarray(i * C, jnp.int32)),
+        (r, C))
+    out_ref[...] = jnp.where(active_j[None, :], cols, Rsel).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("root_block", "pole_tile",
+                                             "interpret"))
+def boundary_rows_update_pallas(R, d, z, origin, tau, kprime, *,
+                                root_block: int = DEFAULT_ROOT_BLOCK,
+                                pole_tile: int = DEFAULT_POLE_TILE,
+                                interpret: bool = False):
+    """Pallas streamed selected-row update.  Contract of core.secular.boundary_rows_update."""
+    r, K = R.shape
+    C = min(root_block, K)
+    grid = ((K + C - 1) // C,)
+    Kp = grid[0] * C
+    if Kp != K:
+        # Pad the column dimension so every block is full; padded columns
+        # are inactive (j >= kprime) and sliced off below.
+        R_p = jnp.pad(R, ((0, 0), (0, Kp - K)))
+        d_p = jnp.pad(d, (0, Kp - K))
+        z_p = jnp.pad(z, (0, Kp - K))
+        org_p = jnp.pad(origin, (0, Kp - K))
+        tau_p = jnp.pad(tau, (0, Kp - K))
+    else:
+        R_p, d_p, z_p, org_p, tau_p = R, d, z, origin, tau
+
+    d_org = d_p[jnp.minimum(org_p, K - 1)]
+    kp_arr = jnp.asarray(kprime, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_boundary_kernel, pole_tile=pole_tile)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, Kp), lambda i: (0, 0)),  # R: 2 rows resident
+            pl.BlockSpec((Kp,), lambda i: (0,)),      # d
+            pl.BlockSpec((Kp,), lambda i: (0,)),      # z (or zhat)
+            pl.BlockSpec((Kp,), lambda i: (0,)),      # d[origin]
+            pl.BlockSpec((Kp,), lambda i: (0,)),      # tau
+            pl.BlockSpec((1,), lambda i: (0,)),       # kprime
+        ],
+        out_specs=pl.BlockSpec((r, C), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, Kp), R.dtype),
+        interpret=interpret,
+    )(R_p, d_p, z_p, d_org, tau_p, kp_arr)
+    return out[:, :K]

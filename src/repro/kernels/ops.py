@@ -1,0 +1,65 @@
+"""Backend-dispatching jit wrappers for the eigensolver hot-spot kernels.
+
+``backend``:
+  * "xla"    -- chunked pure-JAX implementations (repro.core.secular);
+                default on CPU hosts.
+  * "pallas" -- Pallas kernels; compiled natively on TPU, `interpret=True`
+                elsewhere (Python-level execution of the kernel body, used
+                by the test suite to validate the TPU kernels on CPU).
+  * "auto"   -- "pallas" on TPU, "xla" otherwise.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import secular as _sec
+from repro.kernels.secular_roots import secular_solve_pallas
+from repro.kernels.boundary_update import boundary_rows_update_pallas
+from repro.kernels.zhat import zhat_reconstruct_pallas
+
+_BACKEND = "auto"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in ("auto", "xla", "pallas"):
+        raise ValueError(name)
+    _BACKEND = name
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    b = backend or _BACKEND
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return b
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def secular_solve(d, z2, rho, kprime, *, niter: int = 16, chunk: int = 256,
+                  backend: str | None = None):
+    if resolve_backend(backend) == "pallas":
+        return secular_solve_pallas(d, z2, rho, kprime, niter=niter,
+                                    root_block=chunk, interpret=_interpret())
+    return _sec.secular_solve(d, z2, rho, kprime, niter=niter, chunk=chunk)
+
+
+def boundary_rows_update(R, d, z, origin, tau, kprime, *, chunk: int = 256,
+                         backend: str | None = None):
+    if resolve_backend(backend) == "pallas":
+        return boundary_rows_update_pallas(R, d, z, origin, tau, kprime,
+                                           root_block=chunk,
+                                           interpret=_interpret())
+    return _sec.boundary_rows_update(R, d, z, origin, tau, kprime, chunk=chunk)
+
+
+def zhat_reconstruct(d, z, origin, tau, kprime, rho, *, chunk: int = 256,
+                     backend: str | None = None):
+    if resolve_backend(backend) == "pallas":
+        return zhat_reconstruct_pallas(d, z, origin, tau, kprime, rho,
+                                       pole_block=chunk,
+                                       interpret=_interpret())
+    return _sec.zhat_reconstruct(d, z, origin, tau, kprime, rho, chunk=chunk)

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately naive: each oracle materializes the full (K, K) intermediate
+the kernels exist to avoid, so any streaming/tiling bug in the kernels
+shows up as a mismatch.  Tests sweep shapes/dtypes and assert_allclose
+kernel-vs-oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def secular_roots_ref(d, z2, rho, kprime, *, niter: int = 100):
+    """Dense-bracket bisection oracle (slow, unconditionally convergent).
+
+    Operates in the same compact (origin, tau) representation; pure
+    bisection with `niter` halvings, so its only error is ~2^-niter of the
+    initial bracket -- independent of the kernels' rational iteration.
+    Runs in numpy at float64 regardless of input dtype.
+    """
+    d = np.asarray(d, np.float64)
+    z2 = np.asarray(z2, np.float64)
+    rho = float(rho)
+    kprime = int(kprime)
+    K = d.shape[0]
+    origin = np.arange(K, dtype=np.int32)
+    tau = np.zeros(K)
+
+    span = rho * float(np.sum(z2[:kprime]))
+
+    def g(lam):
+        return 1.0 + rho * np.sum(z2[:kprime] / (d[:kprime] - lam))
+
+    for j in range(kprime):
+        if kprime == 1:
+            origin[0], tau[0] = 0, rho * z2[0]
+            break
+        is_last = j == kprime - 1
+        gap_hi = d[j] + span if is_last else d[j + 1]
+        lo_lam, hi_lam = d[j], gap_hi
+        # strict interior bisection on g (increasing)
+        for _ in range(niter):
+            mid = 0.5 * (lo_lam + hi_lam)
+            if g(mid) > 0:
+                hi_lam = mid
+            else:
+                lo_lam = mid
+        lam = 0.5 * (lo_lam + hi_lam)
+        org = j if abs(lam - d[j]) <= abs(lam - gap_hi) or is_last else j + 1
+        origin[j] = org
+        tau[j] = lam - d[org]
+    return jnp.asarray(origin), jnp.asarray(tau)
+
+
+def boundary_rows_update_ref(R, d, z, origin, tau, kprime):
+    """Materializes the full K x K secular eigenvector block Y (the thing
+    the kernel must never do) and applies R @ Y densely."""
+    K = d.shape[0]
+    d_org = d[jnp.minimum(origin, K - 1)]
+    active = jnp.arange(K) < kprime
+    delta = (d[:, None] - d_org[None, :]) - tau[None, :]      # (K_i, K_j)
+    ok = active[:, None] & (delta != 0.0)
+    Y = jnp.where(ok, z[:, None] / jnp.where(ok, delta, 1.0), 0.0)
+    nrm = jnp.sqrt(jnp.sum(Y * Y, axis=0))
+    Y = Y / jnp.where(nrm > 0.0, nrm, 1.0)[None, :]
+    # Deflated columns are identity pass-through.
+    eye = jnp.eye(K, dtype=R.dtype)
+    Y = jnp.where(active[None, :], Y, eye)
+    return R @ Y
+
+
+def zhat_reconstruct_ref(d, z, origin, tau, kprime, rho):
+    """Dense pairwise log-product oracle."""
+    K = d.shape[0]
+    d_org = d[jnp.minimum(origin, K - 1)]
+    active = jnp.arange(K) < kprime
+    tiny = jnp.finfo(d.dtype).tiny
+    lam_diff = (d_org[None, :] - d[:, None]) + tau[None, :]   # (K_i, K_j)
+    pole_diff = d[None, :] - d[:, None]
+    jmask = active[None, :]
+    selfmask = jnp.eye(K, dtype=bool)
+    log_num = jnp.sum(
+        jnp.where(jmask, jnp.log(jnp.maximum(jnp.abs(lam_diff), tiny)), 0.0), axis=1)
+    log_den = jnp.sum(
+        jnp.where(jmask & ~selfmask,
+                  jnp.log(jnp.maximum(jnp.abs(pole_diff), tiny)), 0.0), axis=1)
+    z2hat = jnp.exp(log_num - log_den) / rho
+    zhat = jnp.sign(z) * jnp.sqrt(jnp.maximum(z2hat, 0.0))
+    return jnp.where(active, zhat, z)

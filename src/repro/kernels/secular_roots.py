@@ -1,0 +1,218 @@
+"""Pallas TPU kernel: batched secular-equation root solve.
+
+TPU adaptation of the paper's CUDA block-reduction root solver
+(Section 4.1: "parallelize both across roots and across the pole
+reductions inside each root").  Mapping:
+
+  CUDA                          TPU / Pallas
+  ----------------------------  ------------------------------------------
+  one block per root batch      grid step per root block (ROOT_BLOCK)
+  shared-mem pole staging       (K,) pole/weight vectors resident in VMEM
+  warp reductions over poles    fori over POLE_TILE-sized (C, T) slabs on
+                                the VPU, accumulating g / g' partial sums
+  per-thread Newton state       per-lane root state (tau, lo, hi, best)
+
+VMEM budget per grid step: 2K + O(ROOT_BLOCK * POLE_TILE) floats -- the
+(C, K) broadcast that a naive formulation would materialize is never
+formed; this is the same streaming contract as the XLA fallback in
+repro.core.secular.
+
+The root iteration is the safeguarded DLAED4 middle-way scheme, identical
+in math to repro.core.secular._solve_chunk (ref.py / tests assert
+agreement to ~machine precision across shapes, dtypes and deflation
+patterns).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROOT_BLOCK = 128
+DEFAULT_POLE_TILE = 1024
+
+
+def _secular_kernel(d_ref, z2_ref, rho_ref, kprime_ref,
+                    origin_ref, tau_ref, *, niter, pole_tile):
+    C = origin_ref.shape[0]
+    K = d_ref.shape[0]
+    T = min(pole_tile, K)
+    num_tiles = (K + T - 1) // T
+    dtype = d_ref.dtype
+
+    d = d_ref[...]
+    z2 = z2_ref[...]
+    rho = rho_ref[0]
+    kprime = kprime_ref[0]
+
+    i = pl.program_id(0)
+    jc = i * C + jax.lax.iota(jnp.int32, C)
+    jc_safe = jnp.minimum(jc, K - 1)
+    active_root = jc < kprime
+    is_last = jc == (kprime - 1)
+
+    idxK = jax.lax.iota(jnp.int32, K)
+    active_pole = idxK < kprime
+    zw = jnp.where(active_pole, z2, 0.0)
+    sum_z2 = jnp.sum(zw)
+    span = rho * sum_z2
+
+    d_j = d[jc_safe]
+    jnext = jnp.minimum(jc_safe + 1, K - 1)
+    gap_hi = jnp.where(is_last, d_j + span, d[jnext])
+    mid_lam = 0.5 * (d_j + gap_hi)
+
+    def reduce_tiles(fn, init):
+        """Accumulate fn(d_tile, zw_tile, idx_tile) over pole tiles."""
+        def body(t, acc):
+            start = t * T
+            dt = jax.lax.dynamic_slice(d, (start,), (T,))
+            zt = jax.lax.dynamic_slice(zw, (start,), (T,))
+            it = start + jax.lax.iota(jnp.int32, T)
+            return fn(acc, dt, zt, it)
+        return jax.lax.fori_loop(0, num_tiles, body, init)
+
+    # f(mid): one tiled sweep.
+    def fmid_acc(acc, dt, zt, it):
+        delta = dt[None, :] - mid_lam[:, None]
+        ok = (it < kprime)[None, :] & (delta != 0.0)
+        return acc + jnp.sum(jnp.where(ok, zt[None, :] / jnp.where(ok, delta, 1.0), 0.0), axis=-1)
+    f_mid = 1.0 + rho * reduce_tiles(fmid_acc, jnp.zeros((C,), dtype))
+
+    use_left = (f_mid > 0.0) | is_last
+    origin = jnp.where(use_left, jc_safe, jnext)
+    d_org = d[origin]
+    tau_mid = mid_lam - d_org
+
+    lo = jnp.where(use_left, jnp.zeros_like(tau_mid), tau_mid)
+    hi = jnp.where(use_left,
+                   jnp.where(is_last & (f_mid <= 0.0), span, tau_mid),
+                   jnp.zeros_like(tau_mid))
+    lo = jnp.where(is_last & (f_mid <= 0.0), tau_mid, lo)
+
+    n_lo = jnp.where(is_last, jnp.maximum(jc_safe - 1, 0), jc_safe)
+    n_hi = jnp.where(is_last, jc_safe, jnext)
+    p_lo = d[n_lo] - d_org
+    p_hi = d[n_hi] - d_org
+
+    # Initial guess: value-matching 2-pole quadratic at tau_mid.
+    A_lo = rho * z2[n_lo]
+    A_hi = rho * z2[n_hi]
+    c0 = f_mid - A_lo / (p_lo - tau_mid) - A_hi / (p_hi - tau_mid)
+    qb = -(c0 * (p_lo + p_hi) + A_lo + A_hi)
+    qc = c0 * p_lo * p_hi + A_lo * p_hi + A_hi * p_lo
+    sq0 = jnp.sqrt(jnp.maximum(qb * qb - 4.0 * c0 * qc, 0.0))
+    qq0 = -0.5 * (qb + jnp.where(qb >= 0.0, 1.0, -1.0) * sq0)
+    g1 = jnp.where(c0 != 0.0, qq0 / jnp.where(c0 == 0.0, 1.0, c0), jnp.inf)
+    g2 = jnp.where(qq0 != 0.0, qc / jnp.where(qq0 == 0.0, 1.0, qq0), jnp.inf)
+    in1 = jnp.isfinite(g1) & (g1 > lo) & (g1 < hi)
+    in2 = jnp.isfinite(g2) & (g2 > lo) & (g2 < hi)
+    tau0 = jnp.where(in1, g1, jnp.where(in2, g2, 0.5 * (lo + hi)))
+
+    tiny = jnp.finfo(dtype).tiny
+
+    def eval_g(tau):
+        """Tiled g(tau) and side-split derivative sums."""
+        def acc_fn(acc, dt, zt, it):
+            g_a, wlo_a, whi_a = acc
+            delta = (dt[None, :] - d_org[:, None]) - tau[:, None]  # (C, T)
+            ok = (it < kprime)[None, :] & (delta != 0.0)
+            safe = jnp.where(ok, delta, 1.0)
+            terms = jnp.where(ok, zt[None, :] / safe, 0.0)
+            dterms = terms / safe
+            sl = it[None, :] <= n_lo[:, None]
+            g_a = g_a + jnp.sum(terms, axis=-1)
+            wlo_a = wlo_a + jnp.sum(jnp.where(sl, dterms, 0.0), axis=-1)
+            whi_a = whi_a + jnp.sum(jnp.where(sl, 0.0, dterms), axis=-1)
+            return g_a, wlo_a, whi_a
+        z0 = jnp.zeros((C,), dtype)
+        g_s, wlo_s, whi_s = reduce_tiles(acc_fn, (z0, z0, z0))
+        return 1.0 + rho * g_s, rho * wlo_s, rho * whi_s
+
+    def body(_, state):
+        tau, lo, hi, best_tau, best_g = state
+        g, w_lo, w_hi = eval_g(tau)
+        gp = w_lo + w_hi
+
+        better = jnp.abs(g) < best_g
+        best_tau = jnp.where(better, tau, best_tau)
+        best_g = jnp.where(better, jnp.abs(g), best_g)
+
+        hi = jnp.where(g > 0.0, tau, hi)
+        lo = jnp.where(g <= 0.0, tau, lo)
+
+        D_lo = p_lo - tau
+        D_hi = p_hi - tau
+        Cc = g - D_lo * w_lo - D_hi * w_hi
+        Aa = (D_lo + D_hi) * g - D_lo * D_hi * gp
+        Bb = D_lo * D_hi * g
+        sq = jnp.sqrt(jnp.maximum(Aa * Aa - 4.0 * Bb * Cc, 0.0))
+        eta_neg = (Aa - sq) / jnp.where(Cc == 0.0, 1.0, 2.0 * Cc)
+        eta_pos = 2.0 * Bb / jnp.where(Aa + sq == 0.0, 1.0, Aa + sq)
+        eta = jnp.where(Aa <= 0.0, eta_neg, eta_pos)
+        eta_lin = Bb / jnp.where(Aa == 0.0, 1.0, Aa)
+        newton = -g / jnp.maximum(gp, tiny)
+        eta = jnp.where(Cc == 0.0, jnp.where(Aa != 0.0, eta_lin, newton), eta)
+        eta = jnp.where(g * eta >= 0.0, newton, eta)
+
+        cand = tau + eta
+        inb = jnp.isfinite(cand) & (cand > lo) & (cand < hi)
+        tau_next = jnp.where(inb, cand, 0.5 * (lo + hi))
+        tau_next = jnp.where(g == 0.0, tau, tau_next)
+        return tau_next, lo, hi, best_tau, best_g
+
+    big = jnp.full((C,), jnp.inf, dtype)
+    tau, lo, hi, best_tau, best_g = jax.lax.fori_loop(
+        0, niter, body, (tau0, lo, hi, tau0, big))
+    g_fin, _, _ = eval_g(tau)
+    tau = jnp.where(jnp.abs(g_fin) < best_g, tau, best_tau)
+
+    tau = jnp.where(active_root & (kprime == 1), rho * z2[0], tau)
+    origin = jnp.where(active_root & (kprime == 1), 0, origin)
+    tau = jnp.where(active_root, tau, jnp.zeros_like(tau))
+    origin = jnp.where(active_root, origin, jc_safe)
+
+    origin_ref[...] = origin.astype(jnp.int32)
+    tau_ref[...] = tau.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("niter", "root_block",
+                                             "pole_tile", "interpret"))
+def secular_solve_pallas(d, z2, rho, kprime, *, niter: int = 16,
+                         root_block: int = DEFAULT_ROOT_BLOCK,
+                         pole_tile: int = DEFAULT_POLE_TILE,
+                         interpret: bool = False):
+    """Pallas-kernel secular solve.  Same contract as core.secular.secular_solve."""
+    K = d.shape[0]
+    C = min(root_block, K)
+    grid = ((K + C - 1) // C,)
+    Kp = grid[0] * C
+
+    rho_arr = jnp.asarray(rho, d.dtype).reshape(1)
+    kp_arr = jnp.asarray(kprime, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_secular_kernel, niter=niter,
+                               pole_tile=pole_tile)
+    origin, tau = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K,), lambda i: (0,)),    # d: VMEM-resident poles
+            pl.BlockSpec((K,), lambda i: (0,)),    # z2: VMEM-resident weights
+            pl.BlockSpec((1,), lambda i: (0,)),    # rho
+            pl.BlockSpec((1,), lambda i: (0,)),    # kprime
+        ],
+        out_specs=[
+            pl.BlockSpec((C,), lambda i: (i,)),
+            pl.BlockSpec((C,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Kp,), jnp.int32),
+            jax.ShapeDtypeStruct((Kp,), d.dtype),
+        ],
+        interpret=interpret,
+    )(d, z2, rho_arr, kp_arr)
+    return origin[:K], tau[:K]

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: Gu-Eisenstat secular weight reconstruction.
+
+LAPACK DLAED3's stable-weight recomputation, streamed: for each active
+pole i,
+
+    zhat_i^2 = prod_j (lam_j - d_i) / [rho * prod_{j != i} (d_j - d_i)]
+
+with lam_j - d_i evaluated through the compact delta representation
+(d_org_j - d_i) + tau_j -- the paper's cancellation-free denominator form.
+Log-space accumulation over root tiles keeps the temporary at
+(POLE_BLOCK, ROOT_TILE) and is robust to K ~ 10^5 products.
+
+Grid over pole blocks; all O(K) vectors VMEM-resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_POLE_BLOCK = 128
+DEFAULT_ROOT_TILE = 1024
+
+
+def _zhat_kernel(d_ref, z_ref, dorg_ref, tau_ref, rho_ref, kprime_ref,
+                 out_ref, *, root_tile):
+    K = d_ref.shape[0]
+    C = out_ref.shape[0]
+    T = min(root_tile, K)
+    num_tiles = (K + T - 1) // T
+    dtype = d_ref.dtype
+
+    d = d_ref[...]
+    z = z_ref[...]
+    d_org = dorg_ref[...]
+    tau = tau_ref[...]
+    rho = rho_ref[0]
+    kprime = kprime_ref[0]
+
+    i = pl.program_id(0)
+    ic = i * C + jax.lax.iota(jnp.int32, C)
+    ic_safe = jnp.minimum(ic, K - 1)
+    active_i = ic < kprime
+    d_i = d[ic_safe]
+    tiny = jnp.finfo(dtype).tiny
+
+    def body(t, acc):
+        log_num, log_den = acc
+        start = t * T
+        dt = jax.lax.dynamic_slice(d, (start,), (T,))
+        dot = jax.lax.dynamic_slice(d_org, (start,), (T,))
+        tt = jax.lax.dynamic_slice(tau, (start,), (T,))
+        jt = start + jax.lax.iota(jnp.int32, T)
+        jmask = (jt < kprime)[None, :]
+        lam_diff = (dot[None, :] - d_i[:, None]) + tt[None, :]    # (C, T)
+        pole_diff = dt[None, :] - d_i[:, None]
+        selfmask = jt[None, :] == ic_safe[:, None]
+        log_num = log_num + jnp.sum(
+            jnp.where(jmask, jnp.log(jnp.maximum(jnp.abs(lam_diff), tiny)), 0.0),
+            axis=-1)
+        log_den = log_den + jnp.sum(
+            jnp.where(jmask & ~selfmask,
+                      jnp.log(jnp.maximum(jnp.abs(pole_diff), tiny)), 0.0),
+            axis=-1)
+        return log_num, log_den
+
+    zero = jnp.zeros((C,), dtype)
+    log_num, log_den = jax.lax.fori_loop(0, num_tiles, body, (zero, zero))
+    z2hat = jnp.exp(log_num - log_den) / rho
+    z_i = z[ic_safe]
+    zhat = jnp.sign(z_i) * jnp.sqrt(jnp.maximum(z2hat, 0.0))
+    out_ref[...] = jnp.where(active_i, zhat, z_i).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("pole_block", "root_tile",
+                                             "interpret"))
+def zhat_reconstruct_pallas(d, z, origin, tau, kprime, rho, *,
+                            pole_block: int = DEFAULT_POLE_BLOCK,
+                            root_tile: int = DEFAULT_ROOT_TILE,
+                            interpret: bool = False):
+    """Pallas zhat reconstruction.  Contract of core.secular.zhat_reconstruct."""
+    K = d.shape[0]
+    C = min(pole_block, K)
+    grid = ((K + C - 1) // C,)
+    Kp = grid[0] * C
+
+    d_org = d[jnp.minimum(origin, K - 1)]
+    if Kp != K:
+        d_p = jnp.pad(d, (0, Kp - K))
+        z_p = jnp.pad(z, (0, Kp - K))
+        dorg_p = jnp.pad(d_org, (0, Kp - K))
+        tau_p = jnp.pad(tau, (0, Kp - K))
+    else:
+        d_p, z_p, dorg_p, tau_p = d, z, d_org, tau
+
+    rho_arr = jnp.asarray(rho, d.dtype).reshape(1)
+    kp_arr = jnp.asarray(kprime, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_zhat_kernel, root_tile=root_tile)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Kp,), lambda i: (0,)),
+            pl.BlockSpec((Kp,), lambda i: (0,)),
+            pl.BlockSpec((Kp,), lambda i: (0,)),
+            pl.BlockSpec((Kp,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((C,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Kp,), d.dtype),
+        interpret=interpret,
+    )(d_p, z_p, dorg_p, tau_p, rho_arr, kp_arr)
+    return out[:K]

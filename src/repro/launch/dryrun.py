@@ -1,0 +1,347 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds abstract parameter / optimizer / input
+trees (jax.eval_shape -- nothing is allocated), attaches the production
+shardings from dist/sharding.py, lowers the step function on the requested
+mesh, compiles it, and records memory_analysis / cost_analysis / parsed
+collective bytes into reports/dryrun/<cell>.json.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+The 512 placeholder host devices exist ONLY here (the env var above must
+precede any jax import); smoke tests and benchmarks see 1 device.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.data.pipeline import synthetic_batch_specs
+from repro.dist.sharding import (batch_sharding, cache_shardings,
+                                 logical_param_specs, param_shardings)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import describe, make_production_mesh
+from repro.launch.steps import (make_serve_prefill, make_serve_step,
+                                make_train_step)
+from repro.models import transformer as tf
+from repro.optim.optimizers import adafactor, adamw
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+# Large cells use Adafactor (factored second moment) to fit HBM; see
+# DESIGN.md / EXPERIMENTS.md for the accounting.
+_BIG_ARCHS = {"llama4-maverick-400b-a17b", "dbrx-132b", "deepseek-67b",
+              "qwen2-vl-72b", "zamba2-7b"}
+
+
+def _optimizer_for(arch: str):
+    if arch in _BIG_ARCHS:
+        return adafactor(lr=1e-3)
+    return adamw(lr=3e-4)
+
+
+def _abstract(fn, *args, **kw):
+    # Close over everything (configs, SDS pytrees): eval_shape of a thunk.
+    return jax.eval_shape(lambda: fn(*args, **kw))
+
+
+def build_cell(arch: str, shape_name: str, mesh, layer_override=None,
+               variant: str = "base"):
+    """Returns (fn, arg_shapes, in_shardings, out_shardings, meta).
+
+    variant: perf-iteration step functions (EXPERIMENTS.md section Perf):
+      base       -- the paper-faithful production configuration
+      sp         -- Megatron sequence-parallel residual stream (P7)
+      compressed -- int8 error-feedback cross-pod gradient reduction (P6)
+      pipeline   -- GPipe pipeline over the 'pod' axis (P8)
+    """
+    import dataclasses
+    cfg = get_config(arch)
+    if layer_override is not None:
+        repl = {"num_layers": layer_override, "scan_unroll": True}
+        if cfg.is_encdec:
+            repl["encoder_layers"] = layer_override
+        cfg = dataclasses.replace(cfg, **repl)
+    shape = SHAPES[shape_name]
+    rng = jax.random.PRNGKey(0)
+
+    params_s = _abstract(tf.init_model, rng, cfg)
+    p_sh = param_shardings(params_s, mesh)
+
+    if shape.kind == "train":
+        opt = _optimizer_for(arch)
+        opt_s = _abstract(opt.init, params_s)
+        # optimizer state mirrors param sharding where shapes match; let
+        # scalar counts replicate and factored stats follow params' specs.
+        o_sh = _opt_shardings(opt_s, params_s, p_sh, mesh)
+        batch_s = synthetic_batch_specs(cfg, shape)
+        b_sh = {k: batch_sharding(mesh, shape.global_batch, v.ndim)
+                for k, v in batch_s.items()}
+        if variant == "compressed":
+            from repro.launch.steps import make_train_step_compressed
+            err_s = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32),
+                params_s)
+            e_sh = p_sh
+            step = make_train_step_compressed(cfg, opt, mesh, remat=True)
+            in_shardings = (p_sh, o_sh, b_sh, e_sh)
+            out_shardings = (p_sh, o_sh, None, e_sh)
+            args = (params_s, opt_s, batch_s, err_s)
+        elif variant == "pipeline":
+            from repro.launch.pipeline import make_pipelined_train_step
+            n_stages = mesh.shape.get("pod", 2)
+
+            # Stage ownership: shard the layer-stack dim over 'pod' so each
+            # pod holds (and reduces gradients for) only its own stage --
+            # this is what removes the cross-pod grad all-reduce.
+            def _stage_shard(sh_tree, like_tree):
+                def fix(sh, like):
+                    if like.ndim >= 1 and like.shape[0] == cfg.num_layers \
+                            and cfg.num_layers % n_stages == 0:
+                        spec = list(sh.spec) + [None] * (like.ndim - len(sh.spec))
+                        spec[0] = "pod"
+                        return NamedSharding(mesh, P(*spec))
+                    return sh
+                return jax.tree.map(fix, sh_tree, like_tree)
+
+            p_sh = {**p_sh, "layers": _stage_shard(p_sh["layers"],
+                                                   params_s["layers"])}
+            o_sh = _opt_shardings(opt_s, params_s, p_sh, mesh)
+            step = make_pipelined_train_step(cfg, opt, n_stages=n_stages,
+                                             n_micro=4, remat=True)
+            # batch over 'data' only: 'pod' is the stage axis here.
+            b_sh = {k: NamedSharding(mesh, P(("data",) if v.ndim else None,
+                                             *([None] * (v.ndim - 1))))
+                    for k, v in batch_s.items()}
+            in_shardings = (p_sh, o_sh, b_sh)
+            out_shardings = (p_sh, o_sh, None)
+            args = (params_s, opt_s, batch_s)
+        else:
+            step = make_train_step(cfg, opt, remat=True)
+            in_shardings = (p_sh, o_sh, b_sh)
+            out_shardings = (p_sh, o_sh, None)
+            args = (params_s, opt_s, batch_s)
+        fn = step
+    elif shape.kind == "prefill":
+        batch_s = synthetic_batch_specs(cfg, shape)
+        tokens_s = batch_s["tokens"]
+        b_sh = batch_sharding(mesh, shape.global_batch, 2)
+        fn0 = make_serve_prefill(cfg, max_seq=shape.seq_len)
+        if cfg.is_encdec:
+            frames_s = batch_s["frames"]
+            f_sh = batch_sharding(mesh, shape.global_batch, 3)
+            args = (params_s, tokens_s, frames_s)
+            in_shardings = (p_sh, b_sh, f_sh)
+        else:
+            args = (params_s, tokens_s)
+            in_shardings = (p_sh, b_sh)
+        out_shardings = None
+        fn = fn0
+    else:  # decode
+        B = shape.global_batch
+        cache_s = _abstract(tf.init_cache, params_s, cfg, B, shape.seq_len)
+        if cfg.is_encdec:
+            # cross-attn caches exist only after prefill; build their specs
+            enc_kv = {
+                "k": jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq_len, cfg.num_kv_heads, cfg.head_dim),
+                    jnp.dtype(cfg.compute_dtype)),
+                "v": jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq_len, cfg.num_kv_heads, cfg.head_dim),
+                    jnp.dtype(cfg.compute_dtype)),
+            }
+            stack = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct((cfg.num_layers,) + l.shape,
+                                               l.dtype), enc_kv)
+            cache_s = {"self": cache_s["self"], "cross": stack}
+        c_sh = cache_shardings(cache_s, cfg, mesh, B)
+        tokens_s = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        t_sh = batch_sharding(mesh, B, 2)
+        pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = make_serve_step(cfg)
+        args = (params_s, cache_s, tokens_s, pos_s)
+        in_shardings = (p_sh, c_sh, t_sh, NamedSharding(mesh, P()))
+        out_shardings = (None, c_sh)
+
+    meta = {"arch": arch, "shape": shape_name, "mesh": describe(mesh),
+            "params": int(cfg.num_params()),
+            "active_params": int(cfg.active_params()),
+            "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+            "kind": shape.kind}
+    return fn, args, in_shardings, out_shardings, meta
+
+
+def _opt_shardings(opt_s, params_s, p_sh, mesh):
+    """Optimizer-state shardings: match the parameter's sharding when the
+    leaf shape equals the param shape (adam m/v); shard factored stats by
+    their surviving dims; replicate scalars."""
+    shape_to_sh = {}
+    for pl, sl in zip(jax.tree.leaves(params_s), jax.tree.leaves(p_sh)):
+        shape_to_sh.setdefault(pl.shape, sl)
+
+    rep = NamedSharding(mesh, P())
+
+    def pick(leaf):
+        if leaf.shape in shape_to_sh:
+            return shape_to_sh[leaf.shape]
+        return rep
+
+    return jax.tree.map(pick, opt_s)
+
+
+def _compile_cell(arch, shape_name, mesh, layer_override=None,
+                  variant="base"):
+    fn, args, in_sh, out_sh, meta = build_cell(
+        arch, shape_name, mesh, layer_override=layer_override,
+        variant=variant)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        compiled = jitted.lower(*args).compile()
+    return compiled, meta
+
+
+def _calibrate_layers(arch, shape_name, mesh, cfg, variant="base") -> dict:
+    """XLA's cost_analysis counts while-loop bodies ONCE, so the scanned
+    layer stack is undercounted by ~L.  Compile two small *fully unrolled*
+    variants (cfg.scan_unroll) -- unrolled graphs are counted completely --
+    and extrapolate: metric(L) = fixed + L * per_layer.
+
+    For the hybrid arch the unit is one (mamba-group + shared-attn) group.
+    Returns per-step flops/bytes/collective-bytes corrected to the real L.
+    """
+    if cfg.family == "hybrid":
+        unit = cfg.hybrid_attn_every
+        l1, l2 = 2 * unit, 4 * unit
+        n_units = cfg.num_layers / unit
+        u1, u2 = 2, 4
+    else:
+        l1, l2 = 2, 4
+        n_units = cfg.num_layers
+        u1, u2 = 2, 4
+
+    metrics = []
+    for lo in (l1, l2):
+        compiled, _ = _compile_cell(arch, shape_name, mesh, layer_override=lo,
+                                    variant=variant)
+        a = hlo_analysis.analyze_compiled(compiled)
+        metrics.append((a["flops_per_chip"], a["bytes_per_chip"],
+                        a["collectives"]["total"]))
+    per_unit = [(m2 - m1) / (u2 - u1) for m1, m2 in zip(*metrics)]
+    fixed = [m1 - u1 * d for m1, d in zip(metrics[0], per_unit)]
+    corrected = [f + n_units * d for f, d in zip(fixed, per_unit)]
+    return {
+        "flops_per_chip": max(corrected[0], 0.0),
+        "bytes_per_chip": max(corrected[1], 0.0),
+        "collective_bytes": max(corrected[2], 0.0),
+        "per_layer": {"flops": per_unit[0], "bytes": per_unit[1],
+                      "collective": per_unit[2]},
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             report_dir: str = REPORT_DIR, calibrate: bool = True,
+             variant: str = "base") -> dict:
+    from repro.dist.sharding import set_activation_mesh, set_sequence_parallel
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_activation_mesh(mesh)
+    set_sequence_parallel(variant == "sp")
+    t0 = time.time()
+    fn, args, in_sh, out_sh, meta = build_cell(arch, shape_name, mesh,
+                                               variant=variant)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        analysis = hlo_analysis.analyze_compiled(compiled)
+
+    report = {**meta, "multi_pod": multi_pod,
+              "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+              **analysis}
+
+    if calibrate:
+        try:
+            cfg = get_config(arch)
+            cal = _calibrate_layers(arch, shape_name, mesh, cfg,
+                                    variant=variant)
+            report["calibrated"] = cal
+            report["roofline_calibrated"] = hlo_analysis.roofline_terms(
+                cal["flops_per_chip"], cal["bytes_per_chip"],
+                cal["collective_bytes"])
+        except Exception as e:  # calibration is best-effort
+            report["calibration_error"] = repr(e)
+
+    report["variant"] = variant
+    os.makedirs(report_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    if variant != "base":
+        tag += f"__{variant}"
+    with open(os.path.join(report_dir, tag + ".json"), "w") as f:
+        json.dump(report, f, indent=1)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="base",
+                    choices=["base", "sp", "compressed", "pipeline"])
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--report-dir", default=REPORT_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if not shape_applicable(cfg, SHAPES[shape_name]):
+                print(f"SKIP {arch} x {shape_name} (long-context rule)")
+                continue
+            for mp in meshes:
+                tag = (f"{arch} x {shape_name} x {'2pod' if mp else '1pod'}"
+                       + (f" [{args.variant}]" if args.variant != "base" else ""))
+                try:
+                    rep = run_cell(arch, shape_name, mp, args.report_dir,
+                                   calibrate=not args.no_calibrate,
+                                   variant=args.variant)
+                    r = rep["roofline"]
+                    mem = rep["memory"].get("peak_bytes", 0) / 2**30
+                    print(f"OK   {tag}: compile={rep['compile_s']:.0f}s "
+                          f"peak={mem:.2f}GiB/chip "
+                          f"dominant={r['dominant']} "
+                          f"frac={r['roofline_fraction']:.2f}", flush=True)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL {tag}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES"); raise SystemExit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

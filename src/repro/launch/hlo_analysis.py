@@ -1,0 +1,170 @@
+"""Roofline term extraction from compiled XLA artifacts.
+
+Sources:
+  * compiled.cost_analysis(): per-device HLO FLOPs + bytes accessed
+    (the module is post-SPMD-partitioning, so numbers are per chip).
+  * HLO text parse: per-device collective bytes, summed over the operand
+    shapes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute instruction.
+
+Roofline terms (TPU v5e constants):
+    compute    = flops_per_chip / 197e12           [s]
+    memory     = bytes_per_chip / 819e9            [s]
+    collective = coll_bytes_per_chip / 50e9        [s]
+
+(Equivalent to the total/(chips*rate) formulation since all quantities are
+per-chip from the partitioned module.)
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (per chip, per the assignment)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_GROUP_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
+                            r"(T\(([0-9,]+)\))?")
+
+
+def _crosses_pod(line: str, pod_stride: int) -> bool:
+    """Does this collective's replica group span pods?  Pods are contiguous
+    device-id blocks of `pod_stride` (512-mesh: pod = id // 256)."""
+    m = _GROUP_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x]
+        return len({i // pod_stride for i in ids}) > 1
+    m = _GROUP_IOTA_RE.search(line)
+    if m:
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        total = 1
+        for d in dims:
+            total *= d
+        # iota-form groups: contiguous reshape (optionally transposed).
+        # Without a transpose, group g holds ids [g*gsize, (g+1)*gsize) --
+        # crosses pods iff gsize > pod_stride.  With a transpose the groups
+        # stride across the fastest dims; conservatively flag as crossing
+        # when the strided span exceeds a pod.
+        if m.group(4) is None:
+            return gsize > pod_stride
+        return total > pod_stride
+    return False
+
+
+def collective_bytes(hlo_text: str, pod_stride: int = 256) -> Dict[str, int]:
+    """Per-collective-kind operand bytes from (partitioned) HLO text.
+
+    Also classifies bytes into intra-pod vs cross-pod by replica group
+    (cross-pod = the slow links; the quantity pipeline/compression target).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    out["cross_pod"] = 0
+    out["intra_pod"] = 0
+    for line in hlo_text.splitlines():
+        for kind in _COLLECTIVES:
+            token = f" {kind}("
+            idx = line.find(token)
+            if idx < 0:
+                # start-form async collectives: e.g. all-gather-start(
+                token = f" {kind}-start("
+                idx = line.find(token)
+                if idx < 0:
+                    continue
+            # shapes inside the parens are the operands
+            inner = line[idx + len(token):]
+            depth = 1
+            end = 0
+            for end, ch in enumerate(inner):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            operands = inner[:end]
+            shapes = _SHAPE_RE.findall(operands)
+            if not shapes:
+                # fall back to the result shape (before the '=')
+                shapes = _SHAPE_RE.findall(line[:idx])
+            nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+            out[kind] += nbytes
+            out["count"] += 1
+            if _crosses_pod(line, pod_stride):
+                out["cross_pod"] += nbytes
+            else:
+                out["intra_pod"] += nbytes
+            break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float) -> dict:
+    compute_t = flops / PEAK_FLOPS
+    memory_t = bytes_accessed / HBM_BW
+    coll_t = coll_bytes / LINK_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    dominant = max(terms, key=terms.get)
+    bound = max(compute_t, memory_t, coll_t)
+    terms.update({
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": bound,
+        "roofline_fraction": compute_t / bound if bound > 0 else 0.0,
+    })
+    return terms
+
+
+def analyze_compiled(compiled) -> dict:
+    """All roofline inputs from one jax compiled object (per-chip)."""
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes": int(ma.argument_size_in_bytes
+                              + ma.output_size_in_bytes
+                              + ma.temp_size_in_bytes
+                              - ma.alias_size_in_bytes),
+        }
+    return {
+        "flops_per_chip": flops,
+        "bytes_per_chip": bytes_acc,
+        "collectives": coll,
+        "memory": mem,
+        "roofline": roofline_terms(flops, bytes_acc, coll["total"]),
+    }

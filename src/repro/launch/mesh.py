@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state -- required because the dry-run forces 512 host
+devices via XLA_FLAGS before first jax init, while tests/benches must see
+a single device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) single-pod or (2, 16, 16) two-pod production mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, *, model_parallel: int = 16,
+                  pods: int = 1):
+    """Elastic variant: build the best (pod, data, model) mesh for an
+    arbitrary device count (restart-on-fewer-hosts path)."""
+    model = min(model_parallel, devices)
+    while devices % model:
+        model //= 2
+    rest = devices // model
+    pod = pods if rest % pods == 0 else 1
+    data = rest // pod
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def describe(mesh) -> str:
+    return " x ".join(f"{k}={v}" for k, v in mesh.shape.items())

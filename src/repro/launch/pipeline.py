@@ -1,0 +1,153 @@
+"""Pipeline parallelism over the 'pod' mesh axis (GPipe schedule, SPMD-native).
+
+Motivation (EXPERIMENTS.md P8): on the 2x16x16 mesh, tensor/expert
+collectives and gradient reductions that cross the pod boundary ride the
+slow inter-pod links and dominate the roofline for the MoE training cells.
+Pipelining the *layer* dimension across pods replaces all cross-pod tensor
+traffic with one boundary-activation transfer per microbatch per step.
+
+Realization without shard_map: the classic stage-stacked formulation --
+
+    state  : (n_stages, micro_b, S, D)   with stage axis sharded over 'pod'
+    step t : every stage applies its layer block to its resident
+             microbatch (vmap over the stage axis = stage parallelism),
+             then the buffer shifts by one stage (jnp.concatenate of a
+             shifted slice -> XLA emits a collective-permute across pods).
+
+GPipe schedule: T = n_micro + n_stages - 1 ticks; stage 0 injects
+microbatch t while the last stage retires microbatch t-(n_stages-1).
+Bubble fraction = (n_stages-1)/T.
+
+Known simplification: MoE router aux-loss contributions from bubble ticks
+(zero activations) are excluded by masking the collected outputs only; aux
+is reported unmasked (documented; affects no dry-run metric).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import get_activation_mesh
+from repro.models import layers as nn
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+
+def _constrain_stage(x):
+    """Pin (stage, micro_batch, ...) to ('pod', dp)."""
+    mesh = get_activation_mesh()
+    if mesh is None or "pod" not in mesh.shape:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = [None] * x.ndim
+    if x.shape[0] % mesh.shape["pod"] == 0:
+        spec[0] = "pod"
+    if x.ndim > 1 and "data" in mesh.shape and x.shape[1] % mesh.shape["data"] == 0:
+        spec[1] = "data"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def pipeline_forward(params, cfg: ModelConfig, tokens, *, n_stages: int,
+                     n_micro: int, remat: bool = True):
+    """Decoder-only forward with the layer stack pipelined over stages.
+
+    Returns (logits, aux).  Requires num_layers % n_stages == 0 and
+    batch % n_micro == 0.  Exactly equivalent to tf.forward (bubbles
+    compute on zeros but their outputs are never collected).
+    """
+    from repro.dist.sharding import set_manual_axes
+
+    B, S = tokens.shape
+    assert cfg.num_layers % n_stages == 0, (cfg.num_layers, n_stages)
+    assert B % n_micro == 0, (B, n_micro)
+    per_stage = cfg.num_layers // n_stages
+    mb = B // n_micro
+
+    # Inside the pipeline, 'pod' is the STAGE axis, not a data-parallel
+    # axis: activation constraints must only use 'data', otherwise the
+    # microbatch reshape forces cross-pod regathers of the batch.
+    set_manual_axes({"pod"})
+
+    x = tf._embed(params, cfg, tokens)                  # (B, S, D)
+    x = x.reshape(n_micro, mb, S, D := x.shape[-1])
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (mb, S))
+
+    stage_params = jax.tree.map(
+        lambda a: a.reshape((n_stages, per_stage) + a.shape[1:]),
+        params["layers"])
+
+    def stage_fn(sp, xs):
+        def inner(carry, lp):
+            xx, aux = carry
+            xx, a = tf._attn_block(lp, cfg, xx, positions)
+            return (xx, aux + a), None
+        inner = jax.checkpoint(inner) if remat else inner
+        (xs, aux), _ = jax.lax.scan(inner, (xs, jnp.asarray(0.0)), sp)
+        return xs, aux
+
+    zero_mb = jnp.zeros((mb, S, D), x.dtype)
+
+    def tick(carry, t):
+        state, outputs, aux = carry
+        inject = jnp.where(t < n_micro,
+                           x[jnp.minimum(t, n_micro - 1)], zero_mb)
+        shifted = jnp.concatenate([inject[None], state[:-1]], axis=0)
+        shifted = _constrain_stage(shifted)
+        new_state, aux_t = jax.vmap(stage_fn)(stage_params, shifted)
+        new_state = _constrain_stage(new_state)
+        out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+        retired = jnp.where(t >= n_stages - 1, new_state[-1],
+                            outputs[out_idx])
+        outputs = outputs.at[out_idx].set(retired)
+        return (new_state, outputs, aux + jnp.sum(aux_t)), None
+
+    state0 = jnp.zeros((n_stages, mb, S, D), x.dtype)
+    outputs0 = jnp.zeros((n_micro, mb, S, D), x.dtype)
+    (state, outputs, aux), _ = jax.lax.scan(
+        tick, (state0, outputs0, jnp.asarray(0.0)),
+        jnp.arange(n_micro + n_stages - 1))
+
+    x_out = outputs.reshape(B, S, D)
+    logits = tf._unembed(params, cfg, x_out)
+    set_manual_axes(set())
+    return logits, aux
+
+
+def pipeline_loss_fn(params, cfg: ModelConfig, batch, *, n_stages: int,
+                     n_micro: int, remat: bool = True):
+    logits, aux = pipeline_forward(params, cfg, batch["tokens"],
+                                   n_stages=n_stages, n_micro=n_micro,
+                                   remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    ce = jnp.mean(lse - gold)
+    return ce + aux, {"ce": ce}
+
+
+def make_pipelined_train_step(cfg: ModelConfig, optimizer, *,
+                              n_stages: int, n_micro: int,
+                              remat: bool = True, grad_clip: float = 1.0):
+    def train_step(params, opt_state, batch, lr_scale=1.0):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: pipeline_loss_fn(p, cfg, batch, n_stages=n_stages,
+                                       n_micro=n_micro, remat=remat),
+            has_aux=True)(params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(
+            lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+        new_params, new_opt = optimizer.apply(params, grads, opt_state,
+                                              lr_scale=lr_scale)
+        return new_params, new_opt, {"loss": loss.astype(jnp.float32),
+                                     "grad_norm": gnorm}
+    return train_step

@@ -1,0 +1,132 @@
+"""jit-able step functions with their sharding contracts.
+
+Factories close over (cfg, optimizer) and return pure functions suitable
+for jax.jit with explicit in/out shardings:
+
+  train_step(params, opt_state, batch)          -> (params, opt_state, metrics)
+  serve_prefill(params, tokens[, frames])       -> (logits, caches)
+  serve_step(params, caches, tokens, pos)       -> (logits, caches)
+
+All parameters/optimizer state are donated by the trainer; metrics are
+replicated scalars.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, remat: bool = True,
+                    grad_clip: Optional[float] = 1.0):
+    def train_step(params, opt_state, batch, lr_scale=1.0):
+        def loss_of(p):
+            loss, metrics = tf.loss_fn(p, cfg, batch, remat=remat)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params)
+
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        if grad_clip is not None:
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                grads)
+
+        new_params, new_opt = optimizer.apply(params, grads, opt_state,
+                                              lr_scale=lr_scale)
+        out_metrics = {"loss": loss.astype(jnp.float32),
+                       "ce": metrics["ce"].astype(jnp.float32),
+                       "grad_norm": gnorm}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_train_step_compressed(cfg: ModelConfig, optimizer, mesh, *,
+                               remat: bool = True,
+                               grad_clip: Optional[float] = 1.0):
+    """Training step with int8 error-feedback gradient compression on the
+    cross-pod axis (dist/compression.py).
+
+    The loss/backward runs inside shard_map mapped over 'pod' only (data
+    and model axes stay automatic, so FSDP/TP sharding is unchanged): each
+    pod reduces its gradient intra-pod in f32, then pods exchange int8
+    quantized gradients (1 B/elem on the slow inter-pod links instead of
+    ~2x4 B/elem for a ring all-reduce) with an error-feedback residual
+    carried in the optimizer loop.
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.compression import (CompressionState,
+                                        compressed_cross_pod_mean)
+    from repro.models import transformer as tf_mod
+
+    def train_step(params, opt_state, batch, err_state, lr_scale=1.0):
+        def pod_local(p, b, err):
+            from repro.dist.sharding import set_manual_axes
+
+            def loss_of(pp):
+                loss, metrics = tf_mod.loss_fn(pp, cfg, b, remat=remat)
+                return loss, metrics
+
+            # 'pod' is Manual inside this shard_map: activation sharding
+            # constraints must only mention the auto axes (trace-time flag).
+            set_manual_axes({"pod"})
+            try:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(p)
+            finally:
+                set_manual_axes(set())
+            grads, new_state = compressed_cross_pod_mean(
+                grads, CompressionState(err), "pod")
+            loss = jax.lax.pmean(loss, "pod")
+            ce = jax.lax.pmean(metrics["ce"], "pod")
+            return loss, ce, grads, new_state.error
+
+        batch_specs = jax.tree.map(lambda _: P("pod"), batch)
+        rep = jax.tree.map(lambda _: P(), params)
+        err_specs = jax.tree.map(lambda _: P(), err_state)
+        loss, ce, grads, new_err = jax.shard_map(
+            pod_local, mesh=mesh,
+            in_specs=(rep, batch_specs, err_specs),
+            out_specs=(P(), P(), rep, err_specs),
+            axis_names={"pod"}, check_vma=False)(params, batch, err_state)
+
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        if grad_clip is not None:
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                grads)
+        new_params, new_opt = optimizer.apply(params, grads, opt_state,
+                                              lr_scale=lr_scale)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "ce": ce.astype(jnp.float32), "grad_norm": gnorm}
+        return new_params, new_opt, metrics, new_err
+
+    return train_step
+
+
+def make_serve_prefill(cfg: ModelConfig, max_seq: int):
+    def serve_prefill(params, tokens, frames=None):
+        return tf.prefill(params, cfg, tokens, max_seq,
+                          encoder_input=frames)
+    return serve_prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, caches, tokens, pos):
+        return tf.decode_step(params, cfg, tokens, caches, pos)
+    return serve_step

@@ -1,0 +1,15 @@
+"""repro.models -- composable model zoo for the 10 assigned architectures."""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+    param_count,
+    prefill,
+)
+
+__all__ = ["ModelConfig", "decode_step", "forward", "init_cache",
+           "init_model", "loss_fn", "param_count", "prefill"]

@@ -1,0 +1,552 @@
+"""Model building blocks shared by all 10 architectures.
+
+Plain-pytree parameters (dicts of jnp arrays) + pure apply functions; no
+framework dependency.  Parameter tensors keep semantic axes separate
+(e.g. wq: (d_model, heads, head_dim)) so dist/sharding.py can map logical
+axes -> mesh axes by key-path pattern.
+
+Numerics: matmuls in cfg.compute_dtype (bf16 on TPU), softmax/norm/router
+in float32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _ct(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _init(rng, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_headwise(scale, x, eps: float):
+    """Per-head q/k norm (qwen3): x (..., heads, head_dim)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE + none)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float, dtype=jnp.float32):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=dtype) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = _rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Tuple[int, int, int]):
+    """Qwen2-VL M-RoPE: rotary dims split into (t, h, w) sections, each
+    rotated by its own position stream.  positions3: (3, B, S)."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = _rope_freqs(x.shape[-1], theta)                       # (half,)
+    # Build a per-dim position by selecting the section's position stream.
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)                 # (half,)
+    pos = positions3[sec_id, :, :]                                # (half,B,S)
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs    # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int, dtype=jnp.float32):
+    """Whisper-style fixed sinusoidal position embedding (S, D)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = jnp.arange(seq_len)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (with optional qk-norm, qkv bias, rope variants, KV cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg) -> Params:
+    d, H, G, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": _init(ks[0], (d, H, hd), _dt(cfg)),
+        "wk": _init(ks[1], (d, G, hd), _dt(cfg)),
+        "wv": _init(ks[2], (d, G, hd), _dt(cfg)),
+        "wo": _init(ks[3], (H, hd, d), _dt(cfg), scale=(H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), _dt(cfg))
+        p["bk"] = jnp.zeros((G, hd), _dt(cfg))
+        p["bv"] = jnp.zeros((G, hd), _dt(cfg))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), _dt(cfg))
+        p["k_norm"] = jnp.ones((hd,), _dt(cfg))
+    return p
+
+
+def _project_qkv(p, cfg, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(_ct(cfg)))
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"].astype(_ct(cfg)))
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"].astype(_ct(cfg)))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(_ct(cfg))
+        k = k + p["bk"].astype(_ct(cfg))
+        v = v + p["bv"].astype(_ct(cfg))
+    if cfg.qk_norm:
+        q = rmsnorm_headwise(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_headwise(p["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_style == "standard":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_style == "mrope":
+        pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """q: (B,S,H,hd); k,v: (B,T,G,hd); grouped heads; f32 softmax."""
+    B, S, H, hd = q.shape
+    G = k.shape[2]
+    rep = H // G
+    qg = q.reshape(B, S, G, rep, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bsgrk,btgk->bgrst", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrst,btgk->bsgrk", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+# Sequences at or above this length use the online-softmax KV-block scan
+# (never materializes the S x T score matrix -- peak is S x CHUNK).
+FLASH_THRESHOLD = 8192
+FLASH_KV_CHUNK = 1024
+
+
+def _sdpa_chunked(q, k, v, cfg, *, causal: bool):
+    """Memory-efficient attention: lax.scan over KV chunks with running
+    (max, denominator, accumulator) -- the FlashAttention recurrence in
+    pure JAX.  Peak score tensor is (B, G, rep, S, CHUNK) instead of
+    (..., S, T).  Each chunk body is rematerialized in the backward pass.
+    """
+    B, S, H, hd = q.shape
+    G = k.shape[2]
+    rep = H // G
+    Tlen = k.shape[1]
+    C = min(FLASH_KV_CHUNK, Tlen)
+    assert Tlen % C == 0, (Tlen, C)
+    nchunks = Tlen // C
+    qg = q.reshape(B, S, G, rep, hd)
+    scale = hd ** -0.5
+    kc = jnp.moveaxis(k.reshape(B, nchunks, C, G, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nchunks, C, G, hd), 1, 0)
+    qpos = jnp.arange(S)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        acc, m, denom, t0 = carry
+        kt, vt = inp
+        s = jnp.einsum("bsgrk,btgk->bgrst", qg, kt).astype(jnp.float32) * scale
+        if causal:
+            kpos = t0 + jnp.arange(C)
+            msk = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(msk[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        denom = denom * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bgrst,btgk->bsgrk", p.astype(q.dtype), vt)
+        acc = acc * jnp.moveaxis(alpha, (1, 2, 3), (2, 3, 1))[..., None] + pv
+        return (acc, m_new, denom, t0 + C), None
+
+    acc0 = jnp.zeros((B, S, G, rep, hd), jnp.float32)
+    m0 = jnp.full((B, G, rep, S), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((B, G, rep, S), jnp.float32)
+    (acc, m, denom, _), _ = jax.lax.scan(
+        body, (acc0, m0, d0, jnp.asarray(0, jnp.int32)), (kc, vc))
+    denom = jnp.moveaxis(denom, (1, 2, 3), (2, 3, 1))
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention_forward(p, cfg, x, positions, *, causal=True, return_cache=False):
+    """Full-sequence attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if S >= FLASH_THRESHOLD and k.shape[1] % FLASH_KV_CHUNK == 0:
+        out = _sdpa_chunked(q, k, v, cfg, causal=causal)
+    else:
+        mask = None
+        if causal:
+            it = jnp.arange(S)
+            mask = (it[None, :, None] >= it[None, None, :])[:, None, None, :, :]
+        out = _sdpa(q, k, v, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(_ct(cfg)))
+    if return_cache:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def attention_decode(p, cfg, x, cache, pos):
+    """One-token decode against a pre-allocated KV cache.
+
+    x: (B, 1, D); cache: {"k","v"}: (B, S_max, G, hd); pos: () int32.
+    """
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    z = jnp.zeros((), jnp.asarray(pos).dtype)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (z, pos, z, z))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (z, pos, z, z))
+    S_max = k.shape[1]
+    mask = (jnp.arange(S_max)[None, :] <= pos)[None, None, None, :, :]
+    out = _sdpa(q, k, v, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(_ct(cfg)))
+    return y, {"k": k, "v": v}
+
+
+def init_cross_attention(rng, cfg) -> Params:
+    return init_attention(rng, cfg)
+
+
+def cross_attention(p, cfg, x, kv_cache):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(_ct(cfg)))
+    out = _sdpa(q, kv_cache["k"], kv_cache["v"], None, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(_ct(cfg)))
+
+
+def encoder_kv(p, cfg, enc_out):
+    k = jnp.einsum("bsd,dgk->bsgk", enc_out, p["wk"].astype(_ct(cfg)))
+    v = jnp.einsum("bsd,dgk->bsgk", enc_out, p["wv"].astype(_ct(cfg)))
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA: multi-head latent attention (minicpm3 / deepseek-v2 style)
+# ---------------------------------------------------------------------------
+
+def init_mla(rng, cfg) -> Params:
+    d, H = cfg.d_model, cfg.num_heads
+    rq, rkv = cfg.mla_q_lora_rank, cfg.mla_kv_lora_rank
+    dn, dr, dv = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim, cfg.mla_v_head_dim
+    ks = jax.random.split(rng, 8)
+    return {
+        "wq_a": _init(ks[0], (d, rq), _dt(cfg)),
+        "q_a_norm": jnp.ones((rq,), _dt(cfg)),
+        "wq_b": _init(ks[1], (rq, H, dn + dr), _dt(cfg)),
+        "wkv_a": _init(ks[2], (d, rkv + dr), _dt(cfg)),
+        "kv_a_norm": jnp.ones((rkv,), _dt(cfg)),
+        "wk_b": _init(ks[3], (rkv, H, dn), _dt(cfg)),
+        "wv_b": _init(ks[4], (rkv, H, dv), _dt(cfg)),
+        "wo": _init(ks[5], (H, dv, d), _dt(cfg), scale=(H * dv) ** -0.5),
+    }
+
+
+def _mla_latents(p, cfg, x, positions):
+    """Compressed KV latent c (B,S,rkv) + shared rotary key (B,S,1,dr)."""
+    dr = cfg.mla_qk_rope_dim
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(_ct(cfg)))
+    c, k_rope = kv_a[..., :cfg.mla_kv_lora_rank], kv_a[..., cfg.mla_kv_lora_rank:]
+    c = rmsnorm({"scale": p["kv_a_norm"]}, c, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c, k_rope
+
+
+def _mla_queries(p, cfg, x, positions):
+    dn, dr = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim
+    q_a = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(_ct(cfg)))
+    q_a = rmsnorm({"scale": p["q_a_norm"]}, q_a, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_a, p["wq_b"].astype(_ct(cfg)))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_chunked(q_lat, q_rope, c, kr, scale, *, causal: bool):
+    """Online-softmax MLA attention over latent chunks (FlashAttention
+    recurrence in latent space).  q_lat: (B,S,H,r); q_rope: (B,S,H,dr);
+    c: (B,T,r); kr: (B,T,dr).  Returns ctx_lat (B,S,H,r)."""
+    B, S, H, r = q_lat.shape
+    Tlen = c.shape[1]
+    C = min(FLASH_KV_CHUNK, Tlen)
+    assert Tlen % C == 0, (Tlen, C)
+    nchunks = Tlen // C
+    cc = jnp.moveaxis(c.reshape(B, nchunks, C, r), 1, 0)
+    krc = jnp.moveaxis(kr.reshape(B, nchunks, C, kr.shape[-1]), 1, 0)
+    qpos = jnp.arange(S)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        acc, m, denom, t0 = carry
+        ct, krt = inp
+        s = (jnp.einsum("bshr,btr->bhst", q_lat, ct)
+             + jnp.einsum("bshk,btk->bhst", q_rope, krt)
+             ).astype(jnp.float32) * scale
+        if causal:
+            kpos = t0 + jnp.arange(C)
+            msk = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(msk[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))          # (B,H,S)
+        alpha = jnp.exp(m - m_new)
+        pr = jnp.exp(s - m_new[..., None])
+        denom = denom * alpha + jnp.sum(pr, axis=-1)
+        pv = jnp.einsum("bhst,btr->bshr", pr.astype(q_lat.dtype), ct)
+        acc = acc * jnp.moveaxis(alpha, (1, 2), (2, 1))[..., None] + pv
+        return (acc, m_new, denom, t0 + C), None
+
+    acc0 = jnp.zeros((B, S, H, r), jnp.float32)
+    m0 = jnp.full((B, H, S), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((B, H, S), jnp.float32)
+    (acc, m, denom, _), _ = jax.lax.scan(
+        body, (acc0, m0, d0, jnp.asarray(0, jnp.int32)), (cc, krc))
+    denom = jnp.moveaxis(denom, (1, 2), (2, 1))
+    return (acc / jnp.maximum(denom, 1e-30)[..., None]).astype(q_lat.dtype)
+
+
+def mla_forward(p, cfg, x, positions, *, causal=True, return_cache=False):
+    """Latent-space attention: scores/context computed against the cached
+    latent c, with the nope-key projection absorbed into the query
+    (the standard MLA decode identity, applied at train time too so the
+    exact same einsums are exercised everywhere).  Long sequences use the
+    online-softmax chunked path (never materializes the S x T scores)."""
+    B, S, _ = x.shape
+    dn = cfg.mla_qk_nope_dim
+    c, k_rope = _mla_latents(p, cfg, x, positions)
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions)
+    # Absorb W_kb: q~ = W_kb^T q_nope  -> (B,S,H,rkv)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(_ct(cfg)))
+    scale = (dn + cfg.mla_qk_rope_dim) ** -0.5
+    if S >= FLASH_THRESHOLD and S % FLASH_KV_CHUNK == 0:
+        ctx_lat = _mla_chunked(q_lat, q_rope, c, k_rope[:, :, 0, :],
+                               scale, causal=causal)
+    else:
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat, c)
+                  + jnp.einsum("bshk,btgk->bhst", q_rope,
+                               jnp.broadcast_to(k_rope, k_rope.shape))
+                  ).astype(jnp.float32) * scale
+        if causal:
+            it = jnp.arange(S)
+            scores = jnp.where(
+                it[None, None, :, None] >= it[None, None, None, :],
+                scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c)
+    out = jnp.einsum("bshr,rhv->bshv", ctx_lat, p["wv_b"].astype(_ct(cfg)))
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(_ct(cfg)))
+    if return_cache:
+        return y, {"c": c, "k_rope": k_rope[:, :, 0, :]}
+    return y
+
+
+def mla_decode(p, cfg, x, cache, pos):
+    """One-token MLA decode: the cache holds only the latent + rotary key --
+    this is the memory win MLA exists for (rkv + dr per token, not 2*H*hd)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    c_new, k_rope_new = _mla_latents(p, cfg, x, positions)
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions)
+    z0 = jnp.zeros((), jnp.asarray(pos).dtype)
+    c = jax.lax.dynamic_update_slice(cache["c"], c_new.astype(cache["c"].dtype),
+                                     (z0, pos, z0))
+    kr = jax.lax.dynamic_update_slice(cache["k_rope"],
+                                      k_rope_new[:, :, 0, :].astype(cache["k_rope"].dtype),
+                                      (z0, pos, z0))
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(_ct(cfg)))
+    scale = (cfg.mla_qk_nope_dim + cfg.mla_qk_rope_dim) ** -0.5
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c)
+              + jnp.einsum("bshk,btk->bhst", q_rope, kr)).astype(jnp.float32) * scale
+    S_max = c.shape[1]
+    mask = (jnp.arange(S_max) <= pos)[None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c)
+    out = jnp.einsum("bshr,rhv->bshv", ctx_lat, p["wv_b"].astype(_ct(cfg)))
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(_ct(cfg)))
+    return y, {"c": c, "k_rope": kr}
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, cfg, d_ff=None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": _init(ks[0], (d, f), _dt(cfg)),
+        "w_up": _init(ks[1], (d, f), _dt(cfg)),
+        "w_down": _init(ks[2], (f, d), _dt(cfg), scale=f ** -0.5),
+    }
+
+
+def mlp_forward(p, cfg, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(_ct(cfg)))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(_ct(cfg)))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(_ct(cfg)))
+
+
+# ---------------------------------------------------------------------------
+# MoE with top-k routing, capacity + sort-based dispatch (EP-shardable)
+# ---------------------------------------------------------------------------
+
+def init_moe(rng, cfg) -> Params:
+    d, E, f = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": _init(ks[0], (d, E), jnp.float32),
+        "w_gate": _init(ks[1], (E, d, f), _dt(cfg)),
+        "w_up": _init(ks[2], (E, d, f), _dt(cfg)),
+        "w_down": _init(ks[3], (E, f, d), _dt(cfg), scale=f ** -0.5),
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.d_ff)
+    return p
+
+
+def _moe_group_dispatch(xg, eidg, gvg, cap, E):
+    """Per-group sort-based dispatch (vmapped over DP groups).
+
+    xg: (Tg, D); eidg/gvg: (Tg*k,).  Returns (buf (E, cap, D), combine
+    metadata).  All indexing stays inside the group so the vmapped scatter
+    has an explicit batch dim GSPMD can partition over 'data' (a global
+    scatter here caused involuntary full replication -- see DESIGN.md).
+    """
+    Tk = eidg.shape[0]
+    order = jnp.argsort(eidg, stable=True)
+    eid_s = eidg[order]
+    gv_s = gvg[order]
+    tid_s = (order // (Tk // xg.shape[0]))
+    first = jnp.searchsorted(eid_s, eid_s, side="left")
+    slot = jnp.arange(Tk) - first
+    keep = slot < cap
+    slot_c = jnp.where(keep, slot, cap)
+    buf = jnp.zeros((E, cap + 1, xg.shape[1]), xg.dtype)
+    buf = buf.at[eid_s, slot_c].set(xg[tid_s], mode="drop")
+    return buf[:, :cap], (eid_s, slot_c, tid_s, gv_s, keep)
+
+
+def _moe_group_combine(out, meta, Tg, D, dtype):
+    eid_s, slot_c, tid_s, gv_s, keep = meta
+    cap = out.shape[1]
+    y_s = jnp.where(keep[:, None],
+                    out[eid_s, jnp.minimum(slot_c, cap - 1)],
+                    jnp.zeros((), out.dtype))
+    y_s = y_s * gv_s[:, None].astype(out.dtype)
+    y = jnp.zeros((Tg, D), dtype)
+    return y.at[tid_s].add(y_s.astype(dtype))
+
+
+def moe_forward(p, cfg, x):
+    """Returns (y, aux_loss).  Grouped sort-based capacity dispatch:
+
+      tokens -> top-k experts -> per-DP-group stable sort by expert id ->
+      per-expert contiguous slots (capacity C, overflow dropped) -> batched
+      expert matmuls (G, E, C, d) -> combine weighted by router gates.
+
+    The groups axis G equals the data-parallel shard count (1 on a single
+    device), so dispatch/combine scatters are *batched* over the sharded
+    dim and every index stays shard-local; the expert axis E shards over
+    'model' (EP).
+    """
+    from repro.dist.sharding import dp_axis_extent
+
+    B, S, D = x.shape
+    E, k = cfg.moe_num_experts, cfg.moe_top_k
+    T = B * S
+    G = dp_axis_extent()
+    if T % G != 0:
+        G = 1
+    Tg = T // G
+    xf = x.reshape(G, Tg, D)
+
+    logits = jnp.einsum("gtd,de->gte", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)               # (G,Tg,k)
+    gate_vals = gate_vals / jnp.clip(jnp.sum(gate_vals, -1, keepdims=True),
+                                     1e-9)
+
+    # Load-balance auxiliary loss (Switch-style).
+    me = jnp.mean(probs, axis=(0, 1))                              # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E), axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    cap = int(max(1, round(Tg * k / E * cfg.moe_capacity_factor)))
+
+    eid = expert_idx.reshape(G, Tg * k)
+    gv = gate_vals.reshape(G, Tg * k)
+
+    buf, meta = jax.vmap(
+        lambda xg, eg, gg: _moe_group_dispatch(xg, eg, gg, cap, E)
+    )(xf, eid, gv)                                                  # (G,E,cap,D)
+
+    ct = _ct(cfg)
+    g = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(ct))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(ct))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(ct))
+
+    y = jax.vmap(
+        lambda og, mg: _moe_group_combine(og, mg, Tg, D, x.dtype)
+    )(out, meta)                                                    # (G,Tg,D)
+    y_flat = y.reshape(T, D)
+
+    if cfg.moe_shared_expert:
+        y_flat = y_flat + mlp_forward(
+            p["shared"], cfg, x.reshape(1, T, D))[0].astype(x.dtype)
+
+    return y_flat.reshape(B, S, D), aux

@@ -1,0 +1,204 @@
+"""Mamba2 (SSD / state-space duality) block, chunked, with O(1) decode state.
+
+Implements the SSD algorithm of arXiv:2405.21060: scalar-identity state
+transition per head, chunked into intra-chunk (quadratic within chunk,
+attention-like) and inter-chunk (recurrent state passing) parts.
+
+Train/prefill:  y = SSD(x*dt, exp(dt*A), B, C) computed chunk-parallel.
+Decode:         S <- a * S + dt * (B (x) x);  y = C . S  -- O(1) per token,
+                which is why the long_500k shape runs only on SSM/hybrid
+                architectures (DESIGN.md skip rule).
+
+Shapes: heads H, head dim P (H*P = expand*d_model), state N (single group).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _ct(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    dn = cfg.ssm_expand * d
+    H = cfg.ssm_num_heads
+    P = dn // H
+    N = cfg.ssm_state_dim
+    return d, dn, H, P, N
+
+
+def init_mamba2(rng, cfg) -> Params:
+    d, dn, H, P, N = _dims(cfg)
+    conv_dim = dn + 2 * N
+    ks = jax.random.split(rng, 6)
+    scale = d ** -0.5
+    return {
+        # in_proj -> [z (dn), x (dn), B (N), C (N), dt (H)]
+        "w_in": (jax.random.normal(ks[0], (d, 2 * dn + 2 * N + H), jnp.float32)
+                 * scale).astype(_dt(cfg)),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                     jnp.float32) * 0.5).astype(_dt(cfg)),
+        "conv_b": jnp.zeros((conv_dim,), _dt(cfg)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((dn,), _dt(cfg)),
+        "w_out": (jax.random.normal(ks[2], (dn, d), jnp.float32)
+                  * dn ** -0.5).astype(_dt(cfg)),
+    }
+
+
+def _split_in(cfg, proj):
+    d, dn, H, P, N = _dims(cfg)
+    z = proj[..., :dn]
+    xbc = proj[..., dn: 2 * dn + 2 * N]
+    dt = proj[..., 2 * dn + 2 * N:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, width):
+    """Depthwise causal conv over time: xbc (B, L, C)."""
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _gated_norm(y, z, scale, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32))
+
+
+def mamba2_forward(p, cfg, x, *, return_state: bool = False):
+    """Chunked SSD scan.  x: (B, L, D) -> (B, L, D)."""
+    d, dn, H, P, N = _dims(cfg)
+    B_, L, _ = x.shape
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    proj = jnp.einsum("bld,de->ble", x, p["w_in"].astype(_ct(cfg)))
+    z, xbc_pre, dt_raw = _split_in(cfg, proj)
+    xbc = _causal_conv(xbc_pre, p["conv_w"].astype(_ct(cfg)),
+                       p["conv_b"].astype(_ct(cfg)), cfg.ssm_conv_width)
+    xs = xbc[..., :dn].reshape(B_, L, H, P)
+    Bm = xbc[..., dn: dn + N]                                  # (B,L,N)
+    Cm = xbc[..., dn + N:]                                     # (B,L,N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(p["A_log"])                                   # (H,) negative
+    # log decay per step: la = dt * A  (<= 0)
+    la = dt * A[None, None, :]                                 # (B,L,H)
+
+    # chunk views
+    lac = la.reshape(B_, nc, Q, H)
+    cum = jnp.cumsum(lac, axis=2)                              # (B,nc,Q,H)
+    total = cum[:, :, -1, :]                                   # (B,nc,H)
+    xdt = (xs.astype(jnp.float32) * dt[..., None]).reshape(B_, nc, Q, H, P)
+    Bc = Bm.astype(jnp.float32).reshape(B_, nc, Q, N)
+    Cc = Cm.astype(jnp.float32).reshape(B_, nc, Q, N)
+
+    # ---- intra-chunk (attention-like, strictly causal incl. diagonal) ----
+    # M[t,s] = exp(cum_t - cum_s) for s <= t.  Mask BEFORE the exp: the
+    # discarded (s > t) entries have gap > 0 and exp(gap) overflows, which
+    # poisons the backward pass (inf * 0 -> NaN in the where-grad).
+    gap = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    it = jnp.arange(Q)
+    tri = (it[:, None] >= it[None, :])[None, None, :, :, None]
+    gap = jnp.where(tri, gap, -jnp.inf)
+    Mmat = jnp.exp(gap)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                         scores, Mmat, xdt)
+
+    # ---- inter-chunk: local end-states then sequential chunk scan --------
+    # local state: S_c = sum_s exp(cum_Q - cum_s) * B_s (x) xdt_s
+    wgt = jnp.exp(total[:, :, None, :] - cum)                  # (B,nc,Q,H)
+    S_loc = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", wgt, Bc, xdt)  # (B,nc,H,N,P)
+
+    decay = jnp.exp(total)                                     # (B,nc,H)
+
+    def scan_fn(S_prev, inp):
+        S_l, dec = inp
+        S_new = S_l + dec[:, :, None, None] * S_prev
+        return S_new, S_prev
+
+    S0 = jnp.zeros((B_, H, N, P), jnp.float32)
+    S_last, S_prevs = jax.lax.scan(
+        scan_fn,
+        S0,
+        (jnp.moveaxis(S_loc, 1, 0), jnp.moveaxis(decay, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                      # (B,nc,H,N,P)
+
+    # y_inter[t] = exp(cum_t) * C_t . S_prev(chunk)
+    y_inter = jnp.einsum("bcqh,bcqn,bchnp->bcqhp",
+                         jnp.exp(cum), Cc, S_prevs)
+
+    y = (y_intra + y_inter).reshape(B_, L, H, P)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, L, dn)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps).astype(_ct(cfg))
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"].astype(_ct(cfg)))
+    if return_state:
+        w = cfg.ssm_conv_width
+        cache = {"conv": xbc_pre[:, L - (w - 1):, :].astype(jnp.float32),
+                 "ssm": S_last}
+        return out, cache
+    return out
+
+
+def mamba2_init_cache(cfg, batch: int, dtype=jnp.float32):
+    d, dn, H, P, N = _dims(cfg)
+    conv_dim = dn + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba2_decode(p, cfg, x, cache):
+    """One-token recurrent step.  x: (B, 1, D)."""
+    d, dn, H, P, N = _dims(cfg)
+    B_ = x.shape[0]
+    proj = jnp.einsum("bld,de->ble", x, p["w_in"].astype(_ct(cfg)))
+    z, xbc_new, dt_raw = _split_in(cfg, proj)
+
+    # causal conv over the rolling window
+    window = jnp.concatenate([cache["conv"], xbc_new.astype(cache["conv"].dtype)],
+                             axis=1)                           # (B, W, C)
+    w = p["conv_w"].astype(_ct(cfg))
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(_ct(cfg)), w) \
+        + p["conv_b"].astype(_ct(cfg))
+    xbc = jax.nn.silu(conv_out)[:, None, :]                    # (B,1,C)
+    new_conv = window[:, 1:, :]
+
+    xs = xbc[..., :dn].reshape(B_, H, P)
+    Bm = xbc[:, 0, dn: dn + N]
+    Cm = xbc[:, 0, dn + N:]
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None, :])                               # (B,H)
+    xdt = xs.astype(jnp.float32) * dt[..., None]               # (B,H,P)
+
+    S = cache["ssm"] * a[:, :, None, None] \
+        + jnp.einsum("bn,bhp->bhnp", Bm.astype(jnp.float32), xdt)
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), S)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B_, 1, dn)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps).astype(_ct(cfg))
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"].astype(_ct(cfg)))
+    return out, {"conv": new_conv, "ssm": S}

@@ -1,0 +1,544 @@
+"""Model assembly: decoder-only / encoder-decoder / SSM / hybrid stacks.
+
+All architectures share one parameter layout convention:
+
+    params = {
+      "embed":   (V, D)
+      "head":    (D, V)            -- absent when tie_embeddings
+      "final_norm": {...}
+      "layers":  pytree with leading layer axis (scanned)
+      "enc_*":   encoder stack (whisper)
+      "shared_attn": single shared block (zamba2)
+    }
+
+Layer stacks are `lax.scan`ned over the leading axis so the lowered HLO is
+one layer body regardless of depth (compile-time at 95 layers stays flat);
+`remat` wraps the scan body with jax.checkpoint for activation
+rematerialization during training.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import (constrain_batch_acts,
+                                 constrain_seq_model_acts,
+                                 model_axis_extent)
+from repro.models import layers as nn
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _ct(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _scan(cfg, f, init, xs):
+    """lax.scan honoring cfg.scan_unroll (dry-run calibration unrolls so
+    XLA cost_analysis counts every layer; production keeps rolled loops)."""
+    unroll = True if cfg.scan_unroll else 1
+    return jax.lax.scan(f, init, xs, unroll=unroll)
+
+def _init_block(rng, cfg: ModelConfig, kind: str) -> Params:
+    """One transformer block's parameters.  kind: attn|mla|moe|ssm|encdec."""
+    ks = jax.random.split(rng, 6)
+    p: Params = {"ln1": nn.init_rmsnorm(cfg.d_model, _dt(cfg))}
+    if kind == "ssm":
+        p["mixer"] = ssm_mod.init_mamba2(ks[0], cfg)
+        return p
+    if cfg.attention == "mla":
+        p["attn"] = nn.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = nn.init_attention(ks[0], cfg)
+    p["ln2"] = nn.init_rmsnorm(cfg.d_model, _dt(cfg))
+    if kind == "moe":
+        p["moe"] = nn.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = nn.init_mlp(ks[1], cfg)
+    if kind == "encdec":
+        p["ln_x"] = nn.init_rmsnorm(cfg.d_model, _dt(cfg))
+        p["xattn"] = nn.init_cross_attention(ks[2], cfg)
+    return p
+
+
+def _block_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.moe_num_experts:
+        return "moe"
+    if cfg.is_encdec:
+        return "encdec"
+    return "attn"
+
+
+def _hybrid_counts(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(num_groups, mamba_per_group, tail_mamba) for the zamba2 layout:
+    within each group of `every` blocks the last is the shared attn block."""
+    every = cfg.hybrid_attn_every
+    groups = cfg.num_layers // every
+    tail = cfg.num_layers - groups * every
+    return groups, every - 1, tail
+
+
+def init_model(rng, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(rng, 8)
+    V, D = cfg.vocab_size, cfg.d_model
+    params: Params = {
+        "embed": (jax.random.normal(ks[0], (V, D), jnp.float32) * D ** -0.5
+                  ).astype(_dt(cfg)),
+        "final_norm": nn.init_rmsnorm(D, _dt(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(ks[1], (D, V), jnp.float32)
+                          * D ** -0.5).astype(_dt(cfg))
+
+    if cfg.family == "hybrid":
+        groups, per_group, tail = _hybrid_counts(cfg)
+        def init_mamba_layer(r):
+            return {"ln1": nn.init_rmsnorm(D, _dt(cfg)),
+                    "mixer": ssm_mod.init_mamba2(r, cfg)}
+        params["layers"] = jax.vmap(init_mamba_layer)(
+            jax.random.split(ks[2], groups * per_group))
+        if tail:
+            params["tail_layers"] = jax.vmap(init_mamba_layer)(
+                jax.random.split(ks[3], tail))
+        shared = _init_block(ks[4], cfg, "attn")
+        params["shared_attn"] = shared
+        return params
+
+    kind = _block_kind(cfg)
+    params["layers"] = jax.vmap(lambda r: _init_block(r, cfg, kind))(
+        jax.random.split(ks[2], cfg.num_layers))
+
+    if cfg.is_encdec:
+        def init_enc(r):
+            k1, k2 = jax.random.split(r)
+            return {"ln1": nn.init_rmsnorm(D, _dt(cfg)),
+                    "attn": nn.init_attention(k1, cfg),
+                    "ln2": nn.init_rmsnorm(D, _dt(cfg)),
+                    "mlp": nn.init_mlp(k2, cfg)}
+        params["enc_layers"] = jax.vmap(init_enc)(
+            jax.random.split(ks[5], cfg.encoder_layers))
+        params["enc_norm"] = nn.init_rmsnorm(D, _dt(cfg))
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Block bodies
+# ---------------------------------------------------------------------------
+
+def _attn_block(p, cfg, x, positions, enc_kv=None, causal=True):
+    # Heads that don't divide the TP extent would replicate the score
+    # tensor across 'model'; fall back to sequence parallelism instead.
+    if cfg.num_heads % max(model_axis_extent(), 1) != 0:
+        x = constrain_seq_model_acts(x)
+    else:
+        x = constrain_batch_acts(x)
+    h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        h = nn.mla_forward(p["attn"], cfg, h, positions, causal=causal)
+    else:
+        h = nn.attention_forward(p["attn"], cfg, h, positions, causal=causal)
+    x = x + h
+    if enc_kv is not None:
+        h = nn.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x = x + nn.cross_attention(p["xattn"], cfg, h, enc_kv)
+    h = nn.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    aux = jnp.asarray(0.0, jnp.float32)
+    if "moe" in p:
+        h, aux = nn.moe_forward(p["moe"], cfg, h)
+    else:
+        h = nn.mlp_forward(p["mlp"], cfg, h)
+    return x + h, aux
+
+
+def _ssm_block(p, cfg, x):
+    x = constrain_batch_acts(x)
+    h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    return x + ssm_mod.mamba2_forward(p["mixer"], cfg, h)
+
+
+# ---------------------------------------------------------------------------
+# Training / full-sequence forward
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, tokens):
+    return constrain_batch_acts(params["embed"].astype(_ct(cfg))[tokens])
+
+
+def _unembed(params, cfg, x):
+    x = constrain_batch_acts(x)
+    x = nn.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w = params.get("head", None)
+    if w is None:
+        w = params["embed"].astype(_ct(cfg)).T
+    else:
+        w = w.astype(_ct(cfg))
+    return jnp.einsum("bsd,dv->bsv", x, w)
+
+
+def _encode(params, cfg, frames):
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    pos = nn.sinusoidal_positions(frames.shape[1], cfg.d_model)
+    x = frames.astype(_ct(cfg)) + pos[None].astype(_ct(cfg))
+
+    def body(x, lp):
+        if cfg.num_heads % max(model_axis_extent(), 1) != 0:
+            x = constrain_seq_model_acts(x)
+        else:
+            x = constrain_batch_acts(x)
+        h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        x = x + nn.attention_forward(lp["attn"], cfg, h,
+                                     jnp.zeros(x.shape[:2], jnp.int32),
+                                     causal=False)
+        h = nn.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        return x + nn.mlp_forward(lp["mlp"], cfg, h), None
+
+    x, _ = _scan(cfg, body, x, params["enc_layers"])
+    return nn.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, encoder_input=None,
+            pixel_embeds=None, remat: bool = False):
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    B, S = tokens.shape
+    x = _embed(params, cfg, tokens)
+    if pixel_embeds is not None:
+        x = jnp.concatenate([pixel_embeds.astype(x.dtype), x], axis=1)
+        S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if cfg.is_encdec:
+        assert encoder_input is not None, "whisper needs encoder frames"
+        enc_out = _encode(params, cfg, encoder_input)
+        pos_dec = nn.sinusoidal_positions(S, cfg.d_model)
+        x = x + pos_dec[None].astype(x.dtype)
+
+        def body(carry, lp):
+            x, aux = carry
+            kv = nn.encoder_kv(lp["xattn"], cfg, enc_out)
+            x, a = _attn_block(lp, cfg, x, positions, enc_kv=kv)
+            return (x, aux + a), None
+        body = jax.checkpoint(body) if remat else body
+        (x, aux), _ = _scan(cfg, body, (x, jnp.asarray(0.0)), params["layers"])
+        return _unembed(params, cfg, x), aux
+
+    if cfg.family == "ssm":
+        def body(x, lp):
+            return _ssm_block(lp, cfg, x), None
+        body = jax.checkpoint(body) if remat else body
+        x, _ = _scan(cfg, body, x, params["layers"])
+        return _unembed(params, cfg, x), jnp.asarray(0.0)
+
+    if cfg.family == "hybrid":
+        groups, per_group, tail = _hybrid_counts(cfg)
+        shared = params["shared_attn"]
+        stacked = jax.tree.map(
+            lambda a: a.reshape((groups, per_group) + a.shape[1:]),
+            params["layers"])
+
+        def group_body(x, gp):
+            def inner(x, lp):
+                return _ssm_block(lp, cfg, x), None
+            x, _ = _scan(cfg, inner, x, gp)
+            x, _ = _attn_block(shared, cfg, x, positions)
+            return x, None
+        group_body = jax.checkpoint(group_body) if remat else group_body
+        x, _ = _scan(cfg, group_body, x, stacked)
+        if tail:
+            def inner(x, lp):
+                return _ssm_block(lp, cfg, x), None
+            x, _ = _scan(cfg, inner, x, params["tail_layers"])
+        return _unembed(params, cfg, x), jnp.asarray(0.0)
+
+    # decoder-only attention stacks (dense / moe / vlm)
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _attn_block(lp, cfg, x, positions)
+        return (x, aux + a), None
+    body = jax.checkpoint(body) if remat else body
+    (x, aux), _ = _scan(cfg, body, (x, jnp.asarray(0.0)), params["layers"])
+    return _unembed(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: bool = False):
+    """Next-token cross entropy (f32 logsumexp) + router aux loss."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          encoder_input=batch.get("frames"),
+                          remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    # SPMD-friendly label pick: one-hot contraction fuses into a masked
+    # local reduce + small all-reduce over the vocab-sharded axis (a gather
+    # here would force an all-gather of the full logits).
+    V = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, V, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    ce = jnp.mean(lse - gold)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with per-layer caches
+# ---------------------------------------------------------------------------
+
+def init_cache(params, cfg: ModelConfig, batch: int, max_seq: int):
+    """Pre-allocated decode caches, stacked over layers (scan-compatible)."""
+    G, hd = cfg.num_kv_heads, cfg.head_dim
+    ct = _ct(cfg)
+
+    def attn_cache():
+        return {"k": jnp.zeros((batch, max_seq, G, hd), ct),
+                "v": jnp.zeros((batch, max_seq, G, hd), ct)}
+
+    if cfg.family == "ssm":
+        def one(_):
+            return ssm_mod.mamba2_init_cache(cfg, batch)
+        return jax.vmap(one)(jnp.arange(cfg.num_layers))
+    if cfg.family == "hybrid":
+        groups, per_group, tail = _hybrid_counts(cfg)
+        def one(_):
+            return ssm_mod.mamba2_init_cache(cfg, batch)
+        caches = {
+            "mamba": jax.vmap(one)(jnp.arange(groups * per_group)),
+            "shared": jax.vmap(lambda _: attn_cache())(jnp.arange(groups)),
+        }
+        if tail:
+            caches["tail"] = jax.vmap(one)(jnp.arange(tail))
+        return caches
+    if cfg.attention == "mla":
+        def one(_):
+            return {"c": jnp.zeros((batch, max_seq, cfg.mla_kv_lora_rank), ct),
+                    "k_rope": jnp.zeros((batch, max_seq, cfg.mla_qk_rope_dim), ct)}
+        return jax.vmap(one)(jnp.arange(cfg.num_layers))
+    caches = jax.vmap(lambda _: attn_cache())(jnp.arange(cfg.num_layers))
+    if cfg.is_encdec:
+        return {"self": caches, "cross": None}   # cross filled at prefill
+    return caches
+
+
+def _decode_attn_block(lp, cfg, x, cache, pos, enc_kv=None):
+    x = constrain_batch_acts(x)
+    h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        h, cache = nn.mla_decode(lp["attn"], cfg, h, cache, pos)
+    else:
+        h, cache = nn.attention_decode(lp["attn"], cfg, h, cache, pos)
+    x = x + h
+    if enc_kv is not None:
+        h = nn.rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+        x = x + nn.cross_attention(lp["xattn"], cfg, h, enc_kv)
+    h = nn.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if "moe" in lp:
+        h, _ = nn.moe_forward(lp["moe"], cfg, h)
+    else:
+        h = nn.mlp_forward(lp["mlp"], cfg, h)
+    return x + h, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches, pos, *,
+                encoder_out=None):
+    """One new token for every sequence in the batch.
+
+    tokens: (B, 1) int32; pos: () int32 -- current write position (cache
+    holds `pos` valid entries).  Returns (logits (B, 1, V), caches).
+    """
+    x = _embed(params, cfg, tokens)
+
+    if cfg.family == "ssm":
+        def body(x, inp):
+            lp, c = inp
+            h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            h, c = ssm_mod.mamba2_decode(lp["mixer"], cfg, h, c)
+            return x + h, c
+        x, caches = _scan(cfg, body, x, (params["layers"], caches))
+        return _unembed(params, cfg, x), caches
+
+    if cfg.family == "hybrid":
+        groups, per_group, tail = _hybrid_counts(cfg)
+        shared = params["shared_attn"]
+        stacked = jax.tree.map(
+            lambda a: a.reshape((groups, per_group) + a.shape[1:]),
+            params["layers"])
+        mcaches = jax.tree.map(
+            lambda a: a.reshape((groups, per_group) + a.shape[1:]),
+            caches["mamba"])
+
+        def group_body(x, inp):
+            gp, gc, sc = inp
+            def inner(x, i2):
+                lp, c = i2
+                h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+                h, c = ssm_mod.mamba2_decode(lp["mixer"], cfg, h, c)
+                return x + h, c
+            x, gc = _scan(cfg, inner, x, (gp, gc))
+            x, sc = _decode_attn_block(shared, cfg, x, sc, pos)
+            return x, (gc, sc)
+        x, (mc, sc) = _scan(cfg, group_body, x, (stacked, mcaches,
+                                                   caches["shared"]))
+        new = {"mamba": jax.tree.map(
+                   lambda a: a.reshape((groups * per_group,) + a.shape[2:]), mc),
+               "shared": sc}
+        if tail:
+            def inner(x, i2):
+                lp, c = i2
+                h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+                h, c = ssm_mod.mamba2_decode(lp["mixer"], cfg, h, c)
+                return x + h, c
+            x, tc = _scan(cfg, inner, x, (params["tail_layers"], caches["tail"]))
+            new["tail"] = tc
+        return _unembed(params, cfg, x), new
+
+    if cfg.is_encdec:
+        # position embedding for the *current* decode position
+        S_max = jax.tree.leaves(caches["self"])[0].shape[2]
+        pos_table = nn.sinusoidal_positions(S_max, cfg.d_model)
+        pos_emb = jax.lax.dynamic_slice(
+            pos_table, (jnp.asarray(pos, jnp.int32), jnp.zeros((), jnp.int32)),
+            (1, cfg.d_model))
+        x = x + pos_emb[None].astype(x.dtype)
+
+        def body(x, inp):
+            lp, c, xkv = inp
+            x, c = _decode_attn_block(lp, cfg, x, c, pos, enc_kv=xkv)
+            return x, c
+        x, self_c = _scan(cfg, body, x, (params["layers"], caches["self"],
+                                           caches["cross"]))
+        return _unembed(params, cfg, x), {"self": self_c,
+                                          "cross": caches["cross"]}
+
+    def body(x, inp):
+        lp, c = inp
+        x, c = _decode_attn_block(lp, cfg, x, c, pos)
+        return x, c
+    x, caches = _scan(cfg, body, x, (params["layers"], caches))
+    return _unembed(params, cfg, x), caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_seq: int, *,
+            encoder_input=None):
+    """Process the prompt, build decode caches.  Returns (logits, caches)."""
+    B, S = tokens.shape
+    x = _embed(params, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if cfg.family == "ssm":
+        def body(x, lp):
+            h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            h, c = ssm_mod.mamba2_forward(lp["mixer"], cfg, h,
+                                          return_state=True)
+            return x + h, c
+        x, caches = _scan(cfg, body, x, params["layers"])
+        return _unembed(params, cfg, x), caches
+
+    if cfg.family == "hybrid":
+        groups, per_group, tail = _hybrid_counts(cfg)
+        shared = params["shared_attn"]
+        stacked = jax.tree.map(
+            lambda a: a.reshape((groups, per_group) + a.shape[1:]),
+            params["layers"])
+
+        def pad_kv(c):
+            padded = {}
+            for key in ("k", "v"):
+                buf = jnp.zeros((B, max_seq) + c[key].shape[2:], c[key].dtype)
+                padded[key] = jax.lax.dynamic_update_slice(
+                    buf, c[key], (0, 0, 0, 0))
+            return padded
+
+        def group_body(x, gp):
+            def inner(x, lp):
+                h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+                h, c = ssm_mod.mamba2_forward(lp["mixer"], cfg, h,
+                                              return_state=True)
+                return x + h, c
+            x, gc = _scan(cfg, inner, x, gp)
+            h = nn.rmsnorm(shared["ln1"], x, cfg.norm_eps)
+            h, kv = nn.attention_forward(shared["attn"], cfg, h, positions,
+                                         causal=True, return_cache=True)
+            x = x + h
+            h = nn.rmsnorm(shared["ln2"], x, cfg.norm_eps)
+            x = x + nn.mlp_forward(shared["mlp"], cfg, h)
+            return x, (gc, pad_kv(kv))
+        x, (mc, sc) = _scan(cfg, group_body, x, stacked)
+        caches = {"mamba": jax.tree.map(
+                      lambda a: a.reshape((groups * per_group,) + a.shape[2:]), mc),
+                  "shared": sc}
+        if tail:
+            def inner(x, lp):
+                h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+                h, c = ssm_mod.mamba2_forward(lp["mixer"], cfg, h,
+                                              return_state=True)
+                return x + h, c
+            x, tc = _scan(cfg, inner, x, params["tail_layers"])
+            caches["tail"] = tc
+        return _unembed(params, cfg, x), caches
+
+    enc_out = None
+    if cfg.is_encdec:
+        assert encoder_input is not None
+        enc_out = _encode(params, cfg, encoder_input)
+        pos_dec = nn.sinusoidal_positions(S, cfg.d_model)
+        x = x + pos_dec[None].astype(x.dtype)
+
+    def pad_cache(c):
+        out = {}
+        for key, buf_v in c.items():
+            buf = jnp.zeros((B, max_seq) + buf_v.shape[2:], buf_v.dtype)
+            idx = (0,) * buf.ndim
+            out[key] = jax.lax.dynamic_update_slice(buf, buf_v, idx)
+        return out
+
+    def body(x, lp):
+        # Same propagation pin as _attn_block (P2/P5 in EXPERIMENTS.md).
+        if cfg.num_heads % max(model_axis_extent(), 1) != 0:
+            x = constrain_seq_model_acts(x)
+        else:
+            x = constrain_batch_acts(x)
+        h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        if cfg.attention == "mla":
+            h, c = nn.mla_forward(lp["attn"], cfg, h, positions,
+                                  return_cache=True)
+        else:
+            h, c = nn.attention_forward(lp["attn"], cfg, h, positions,
+                                        return_cache=True)
+        x = x + h
+        xkv = None
+        if cfg.is_encdec:
+            hh = nn.rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+            xkv = nn.encoder_kv(lp["xattn"], cfg, enc_out)
+            x = x + nn.cross_attention(lp["xattn"], cfg, hh, xkv)
+        h = nn.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if "moe" in lp:
+            h, _ = nn.moe_forward(lp["moe"], cfg, h)
+        else:
+            h = nn.mlp_forward(lp["mlp"], cfg, h)
+        out = (pad_cache(c), xkv) if cfg.is_encdec else pad_cache(c)
+        return x + h, out
+
+    x, caches = _scan(cfg, body, x, params["layers"])
+    logits = _unembed(params, cfg, x)
+    if cfg.is_encdec:
+        self_c, cross_c = caches
+        return logits, {"self": self_c, "cross": cross_c}
+    return logits, caches

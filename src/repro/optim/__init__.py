@@ -1,0 +1,4 @@
+from repro.optim.optimizers import Optimizer, adamw, adafactor, sgd
+from repro.optim.spectral_adapt import SpectralGovernor
+
+__all__ = ["Optimizer", "SpectralGovernor", "adafactor", "adamw", "sgd"]

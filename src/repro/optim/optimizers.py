@@ -1,0 +1,151 @@
+"""Hand-rolled optimizers (no optax dependency).
+
+API:
+    opt = adamw(lr=3e-4)
+    state = opt.init(params)
+    new_params, new_state = opt.apply(params, grads, state, lr_scale=1.0)
+
+`lr_scale` is the hook the spectral governor (optim/spectral_adapt.py)
+drives from eigenvalue-only curvature estimates.
+
+State dtype is configurable: bf16 moments for HBM-constrained dry-runs,
+Adafactor for the 400B-class MoE (factored second moment, O(m+n) per
+matrix instead of O(mn)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    apply: Callable[..., Any]
+    name: str
+
+
+def _cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9):
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def apply(params, grads, state, lr_scale=1.0):
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                          state["mu"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - lr * lr_scale * m.astype(jnp.float32)).astype(p.dtype),
+            params, mu)
+        return new_params, {"mu": mu, "count": state["count"] + 1}
+
+    return Optimizer(init, apply, "sgd")
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          state_dtype=jnp.float32):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def apply(params, grads, state, lr_scale=1.0):
+        c = state["count"] + 1
+        bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mn = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vn = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            step = (mn / bc1) / (jnp.sqrt(vn / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            pn = p.astype(jnp.float32) - lr * lr_scale * step
+            return pn.astype(p.dtype), mn.astype(state_dtype), vn.astype(state_dtype)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, apply, "adamw")
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0):
+    """Factored second-moment optimizer (Shazeer & Stern 2018).
+
+    For any parameter with >= 2 dims the second moment is stored as a
+    (row, col) outer-product factorization over the trailing two axes --
+    O(m+n) state, which is what lets the 782B-param llama4 cell fit the
+    dry-run HBM budget (EXPERIMENTS.md)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def zeros(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(zeros, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def apply(params, grads, state, lr_scale=1.0):
+        c = state["count"] + 1
+        beta = 1.0 - c.astype(jnp.float32) ** -decay
+
+        def upd(p, g, v):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(jnp.mean(vr, axis=-1,
+                                                keepdims=True)[..., None], eps))
+                step = gf * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                vn = beta * v["v"] + (1 - beta) * g2
+                step = gf * jax.lax.rsqrt(jnp.maximum(vn, eps))
+                nv = {"v": vn}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(step * step) + eps)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            pn = p.astype(jnp.float32) - lr * lr_scale * step
+            return pn.astype(p.dtype), nv
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_v = tdef.unflatten([o[1] for o in out])
+        return new_params, {"v": new_v, "count": c}
+
+    return Optimizer(init, apply, "adafactor")
+
+
+OPTIMIZERS = {"sgd": sgd, "adamw": adamw, "adafactor": adafactor}
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return OPTIMIZERS[name](**kw)

@@ -1,0 +1,48 @@
+"""Spectral LR governor: eigenvalue-only curvature -> lr_scale.
+
+The paper's motivating workflow ("the application needs the eigenvalues
+before deciding whether eigenvectors are necessary", Section 1) realized as
+an optimizer feature: every `period` steps the trainer runs SLQ on the
+curvature operator (eigenvalues only -- no eigenvector state is ever
+materialized, which is exactly what BR makes cheap) and the governor maps
+lam_max to a learning-rate scale:
+
+    scale = min(1, target_sharpness / lam_max)
+
+i.e. classic 2/eta stability control.  Between probes the scale is held.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class SpectralGovernor:
+    target_sharpness: float = 100.0
+    min_scale: float = 0.05
+    period: int = 50
+    ema: float = 0.7
+    _lam_max: float = 0.0
+    _scale: float = 1.0
+
+    def should_probe(self, step: int) -> bool:
+        return step % self.period == 0
+
+    def update(self, lam_max: float) -> float:
+        if self._lam_max == 0.0:
+            self._lam_max = lam_max
+        else:
+            self._lam_max = self.ema * self._lam_max + (1 - self.ema) * lam_max
+        if self._lam_max > 0:
+            self._scale = max(self.min_scale,
+                              min(1.0, self.target_sharpness / self._lam_max))
+        return self._scale
+
+    @property
+    def scale(self) -> float:
+        return self._scale
+
+    @property
+    def lam_max(self) -> float:
+        return self._lam_max

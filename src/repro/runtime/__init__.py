@@ -1,0 +1,5 @@
+from repro.runtime.watchdog import Watchdog
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.retry import retry_transient
+
+__all__ = ["StragglerMonitor", "Watchdog", "retry_transient"]

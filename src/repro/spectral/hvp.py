@@ -1,0 +1,40 @@
+"""Curvature-operator matvecs over the training state.
+
+make_hvp:  v -> H v       (Hessian of the loss wrt params, via jvp-of-grad;
+                           exact, one extra fwd+bwd per matvec)
+make_gnvp: v -> G v       (Gauss-Newton: J^T (J v) through the loss head --
+                           PSD, the usual choice for optimizer governance)
+
+Both close over (params, batch) and inherit their sharding: under pjit the
+matvec is as distributed as the train step itself.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_hvp(loss_of_params: Callable, params) -> Callable:
+    grad_fn = jax.grad(loss_of_params)
+
+    def hvp(v):
+        return jax.jvp(grad_fn, (params,), (v,))[1]
+
+    return hvp
+
+
+def make_gnvp(logits_of_params: Callable, loss_of_logits: Callable,
+              params) -> Callable:
+    """Gauss-Newton vector product: J^T H_out J v."""
+
+    def gnvp(v):
+        logits, jv = jax.jvp(logits_of_params, (params,), (v,))
+        h_out = jax.grad(
+            lambda lg: jnp.vdot(jax.grad(loss_of_logits)(lg), jv))(logits)
+        _, vjp_fn = jax.vjp(logits_of_params, params)
+        return vjp_fn(h_out)[0]
+
+    return gnvp

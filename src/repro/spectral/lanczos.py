@@ -1,0 +1,70 @@
+"""Lanczos tridiagonalization of pytree-valued linear operators.
+
+This is the bridge between the training system and the paper's eigensolver:
+m Lanczos steps against the (sharded) Hessian/GGN reduce the curvature
+operator to a symmetric tridiagonal (alpha, beta) -- exactly the input the
+BR boundary-row D&C solver consumes.  The matvec runs under whatever pjit
+sharding the training step uses, so the reduction is distributed while the
+tridiagonal solve is replicated (it is O(m) data).
+
+Full reorthogonalization is optional (m is small; 2m pytree dots).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _dot(a, b):
+    leaves = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)),
+        a, b)
+    return sum(jax.tree.leaves(leaves))
+
+
+def _axpy(alpha, x, y):
+    return jax.tree.map(
+        lambda xi, yi: alpha * xi.astype(jnp.float32) + yi.astype(jnp.float32),
+        x, y)
+
+
+def _scale(alpha, x):
+    return jax.tree.map(lambda xi: alpha * xi.astype(jnp.float32), x)
+
+
+def lanczos_tridiag(matvec: Callable, probe, num_steps: int, *,
+                    full_reorth: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run `num_steps` Lanczos iterations from `probe` (a pytree).
+
+    Returns (alpha (m,), beta (m-1,)) of the Krylov tridiagonal.  Python
+    loop (m is small and each step is a full distributed matvec); call
+    under jit for fusion if desired.
+    """
+    nrm = jnp.sqrt(_dot(probe, probe))
+    v = _scale(1.0 / nrm, probe)
+    v_prev = jax.tree.map(jnp.zeros_like, v)
+    basis = [v] if full_reorth else None
+
+    alphas, betas = [], []
+    beta = jnp.asarray(0.0, jnp.float32)
+    for step in range(num_steps):
+        w = matvec(v)
+        alpha = _dot(w, v)
+        w = _axpy(-alpha, v, w)
+        w = _axpy(-beta, v_prev, w)
+        if full_reorth:
+            for u in basis:
+                w = _axpy(-_dot(w, u), u, w)
+        beta = jnp.sqrt(jnp.maximum(_dot(w, w), 0.0))
+        alphas.append(alpha)
+        if step < num_steps - 1:
+            betas.append(beta)
+            v_prev = v
+            v = _scale(1.0 / jnp.maximum(beta, 1e-30), w)
+            if full_reorth:
+                basis.append(v)
+    return jnp.stack(alphas), (jnp.stack(betas) if betas
+                               else jnp.zeros((0,), jnp.float32))

@@ -1,0 +1,6 @@
+import jax
+
+# The eigensolver library is validated at float64 (its accuracy claims are
+# 1e-12-relative against LAPACK references); model smoke tests pin their
+# own float32 dtypes explicitly so x64 does not affect them.
+jax.config.update("jax_enable_x64", True)

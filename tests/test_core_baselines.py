@@ -1,0 +1,59 @@
+"""Baselines: STERF (QR/QL), lazy-replay D&C, full-vector D&C.
+
+Theorem 3.3's premise (shared merge core) means lazy/full/BR must agree to
+rounding; STERF is an independent algorithm and checked against scipy.
+"""
+
+import numpy as np
+import pytest
+import scipy.linalg as sla
+
+from repro.core import (
+    eig_tridiagonal_full_dc,
+    eigvalsh_tridiagonal,
+    eigvalsh_tridiagonal_lazy,
+    eigvalsh_tridiagonal_sterf,
+    dense_from_tridiag,
+    make_family,
+)
+
+
+@pytest.mark.parametrize("family", ["uniform", "toeplitz", "clustered"])
+@pytest.mark.parametrize("n", [16, 100, 256])
+def test_sterf_matches_lapack(family, n):
+    d, e = make_family(family, n)
+    got = np.asarray(eigvalsh_tridiagonal_sterf(d, e))
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    assert np.max(np.abs(got - ref)) / max(1, np.max(np.abs(ref))) < 1e-11
+
+
+@pytest.mark.parametrize("family", ["uniform", "normal", "clustered"])
+def test_lazy_replay_agrees_with_br(family):
+    """Same split tree + deflation + secular convention => same values."""
+    n = 128
+    d, e = make_family(family, n)
+    br = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8, method="br"))
+    lazy = np.asarray(eigvalsh_tridiagonal_lazy(d, e, leaf=8))
+    np.testing.assert_allclose(lazy, br, atol=1e-11, rtol=0)
+
+
+@pytest.mark.parametrize("n", [32, 96])
+def test_full_dc_eigenpairs(n):
+    """Full-vector D&C: A Q = Q diag(lam) and Q orthogonal."""
+    d, e = make_family("uniform", n)
+    lam, Q = eig_tridiagonal_full_dc(d, e, leaf=8)
+    lam, Q = np.asarray(lam), np.asarray(Q)
+    A = np.asarray(dense_from_tridiag(d, e))
+    assert np.max(np.abs(Q.T @ Q - np.eye(n))) < 1e-10
+    assert np.max(np.abs(A @ Q - Q * lam[None, :])) < 1e-9
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    assert np.max(np.abs(lam - ref)) < 1e-11
+
+
+def test_all_methods_agree():
+    d, e = make_family("normal", 150)
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    for method in ("br", "sterf", "lazy", "full", "eigh"):
+        got = np.asarray(eigvalsh_tridiagonal(d, e, method=method))
+        err = np.max(np.abs(got - ref)) / max(1, np.max(np.abs(ref)))
+        assert err < 1e-10, (method, err)

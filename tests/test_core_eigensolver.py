@@ -1,0 +1,110 @@
+"""BR boundary-row D&C: correctness against LAPACK references."""
+
+import numpy as np
+import pytest
+import scipy.linalg as sla
+
+from repro.core import (eigvalsh_tridiagonal, eigvalsh_tridiagonal_br,
+                        dense_from_tridiag, make_family, FAMILIES)
+
+
+def _ref(d, e):
+    return sla.eigh_tridiagonal(d, e, eigvals_only=True)
+
+
+def _efwd(got, ref):
+    return np.max(np.abs(np.asarray(got) - ref)) / max(1.0, np.max(np.abs(ref)))
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("n", [5, 16, 33, 64, 100, 257, 512])
+def test_br_matches_lapack(family, n):
+    d, e = make_family(family, n)
+    got = eigvalsh_tridiagonal(d, e, leaf=8)
+    assert _efwd(got, _ref(d, e)) < 5e-13
+
+
+@pytest.mark.parametrize("leaf", [4, 8, 16, 32])
+def test_leaf_size_invariance(leaf):
+    d, e = make_family("uniform", 200)
+    got = eigvalsh_tridiagonal(d, e, leaf=leaf)
+    assert _efwd(got, _ref(d, e)) < 5e-13
+
+
+@pytest.mark.parametrize("chunk", [16, 64, 333])
+def test_chunk_invariance(chunk):
+    """The streaming chunk size is a memory knob only -- results identical."""
+    d, e = make_family("normal", 150)
+    a = eigvalsh_tridiagonal(d, e, leaf=8, chunk=chunk)
+    b = eigvalsh_tridiagonal(d, e, leaf=8, chunk=150)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=1e-13)
+
+
+def test_zero_offdiagonal_splits():
+    """e == 0 decouples exactly (handled by total deflation, rho = 0)."""
+    rng = np.random.default_rng(3)
+    d = rng.standard_normal(64)
+    e = rng.uniform(0.1, 0.3, 63)
+    e[13] = 0.0
+    e[40] = 0.0
+    got = eigvalsh_tridiagonal(d, e, leaf=8)
+    assert _efwd(got, _ref(d, e)) < 5e-13
+
+
+def test_duplicate_diagonal_entries():
+    d = np.ones(48)
+    e = np.full(47, 1e-3)
+    got = eigvalsh_tridiagonal(d, e, leaf=8)
+    assert _efwd(got, _ref(d, e)) < 5e-13
+
+
+def test_tiny_matrices():
+    for n in (1, 2, 3):
+        rng = np.random.default_rng(n)
+        d = rng.standard_normal(n)
+        e = np.abs(rng.standard_normal(max(n - 1, 0))) + 0.1
+        got = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8))
+        ref = np.linalg.eigvalsh(np.asarray(dense_from_tridiag(d, e)))
+        np.testing.assert_allclose(got, ref, atol=1e-13)
+
+
+def test_boundary_rows_match_dense_eigh():
+    """blo/bhi(Q) agree with dense eigenvectors up to column sign, including
+    padded sizes (the flip-identity path)."""
+    for n in (64, 100):
+        d, e = make_family("uniform", n)
+        A = np.asarray(dense_from_tridiag(d, e))
+        w, V = np.linalg.eigh(A)
+        res = eigvalsh_tridiagonal_br(d, e, leaf=8, return_boundary=True)
+        assert np.max(np.abs(np.abs(np.asarray(res.blo)) - np.abs(V[0]))) < 1e-10
+        assert np.max(np.abs(np.abs(np.asarray(res.bhi)) - np.abs(V[-1]))) < 1e-10
+        # rows of an orthogonal matrix have unit norm
+        assert abs(np.linalg.norm(res.blo) - 1.0) < 1e-10
+        assert abs(np.linalg.norm(res.bhi) - 1.0) < 1e-10
+
+
+def test_float32_path():
+    d, e = make_family("uniform", 256, dtype=np.float32)
+    got = eigvalsh_tridiagonal(d, e, leaf=8, dtype=np.float32)
+    assert got.dtype == np.float32
+    assert _efwd(got, _ref(d.astype(np.float64), e.astype(np.float64))) < 5e-4
+
+
+def test_gershgorin_padding_sentinels_dropped():
+    """n that forces padding: no sentinel leaks into the spectrum."""
+    d, e = make_family("normal", 77)
+    got = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8))
+    assert got.shape == (77,)
+    ref = _ref(d, e)
+    assert _efwd(got, ref) < 5e-13
+    assert np.all(np.diff(got) >= -1e-12)   # ascending
+
+
+def test_workspace_model_linear():
+    from repro.core import workspace_model, workspace_model_lazy
+    w1 = workspace_model(1 << 12)["persistent_bytes"]
+    w2 = workspace_model(1 << 13)["persistent_bytes"]
+    assert w2 / w1 == pytest.approx(2.0, rel=0.01)       # O(n)
+    l1 = workspace_model_lazy(1 << 12)["persistent_bytes"]
+    l2 = workspace_model_lazy(1 << 13)["persistent_bytes"]
+    assert l2 / l1 == pytest.approx(4.0, rel=0.05)       # O(n^2)

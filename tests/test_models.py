@@ -1,0 +1,204 @@
+"""Per-architecture smoke + consistency tests (reduced configs, CPU).
+
+The decode-consistency test is the strongest one: teacher-forced
+forward(tokens) logits must match the prefill+decode_step chain position by
+position, which exercises every cache path (GQA KV, MLA latent, Mamba2
+conv+ssm state, zamba2 hybrid, whisper self+cross).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, get_smoke_config, SHAPES, shape_applicable
+from repro.models import (decode_step, forward, init_cache, init_model,
+                          loss_fn, param_count, prefill)
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            RNG, (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = init_model(RNG, cfg)
+    batch = _batch(cfg)
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          encoder_input=batch.get("frames"))
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, metrics = loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_teacher_forcing(arch):
+    import dataclasses
+    cfg = get_smoke_config(arch)
+    if cfg.moe_num_experts:
+        # Capacity drops differ between full-sequence and per-token routing
+        # (inherent to capacity-based MoE); disable drops for equivalence.
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=16.0)
+    params = init_model(RNG, cfg)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    tokens = batch["tokens"]
+    full_logits, _ = forward(params, cfg, tokens,
+                             encoder_input=batch.get("frames"))
+
+    # prefill on the first half, decode the second half token by token
+    half = S // 2
+    lg, caches = prefill(params, cfg, tokens[:, :half], max_seq=S,
+                         encoder_input=batch.get("frames"))
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(full_logits[:, :half], np.float32),
+                               atol=2e-3, rtol=2e-3)
+    for i in range(half, S):
+        lg, caches = decode_step(params, cfg, tokens[:, i:i + 1], caches,
+                                 jnp.asarray(i, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(full_logits[:, i], np.float32),
+            atol=2e-3, rtol=2e-3, err_msg=f"{arch} pos {i}")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-130m"])
+def test_tiny_training_reduces_loss(arch):
+    from repro.optim.optimizers import adamw
+    cfg = get_smoke_config(arch)
+    params = init_model(RNG, cfg)
+    # SSD recurrences want a gentler LR at f32 than attention stacks.
+    opt = adamw(lr=1e-3 if arch == "mamba2-130m" else 3e-3)
+    state = opt.init(params)
+
+    def step(params, state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        params, state = opt.apply(params, grads, state)
+        return params, state, loss
+
+    step = jax.jit(step)
+    batch = _batch(cfg, B=4, S=32)
+    losses = []
+    for _ in range(30):
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_full_configs_match_assignment():
+    """The full (non-smoke) configs carry the exact assigned dimensions."""
+    spec = {
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "mamba2-130m": (24, 768, 24, 24, 0, 50280),
+    }
+    for arch, (L, d, H, G, f, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, H, G, f, V), arch
+    # family features
+    assert get_config("llama4-maverick-400b-a17b").moe_num_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").moe_top_k == 1
+    assert get_config("dbrx-132b").moe_num_experts == 16
+    assert get_config("dbrx-132b").moe_top_k == 4
+    assert get_config("minicpm3-4b").attention == "mla"
+    assert get_config("qwen3-0.6b").qk_norm
+    assert get_config("qwen2-1.5b").qkv_bias
+    assert get_config("qwen2-vl-72b").rope_style == "mrope"
+    assert get_config("zamba2-7b").ssm_state_dim == 64
+    assert get_config("mamba2-130m").ssm_state_dim == 128
+    assert get_config("mamba2-130m").attention == "none"
+    assert get_config("whisper-small").encoder_layers == 12
+
+
+def test_long_context_skip_rule():
+    long = SHAPES["long_500k"]
+    runnable = [a for a in ARCHS if shape_applicable(get_config(a), long)]
+    assert sorted(runnable) == ["mamba2-130m", "zamba2-7b"]
+
+
+def test_param_count_sanity():
+    """Analytic count ~ matches actual leaf sizes on smoke configs."""
+    for arch in ("qwen3-0.6b", "mamba2-130m"):
+        cfg = get_smoke_config(arch)
+        params = init_model(RNG, cfg)
+        actual = param_count(params)
+        analytic = cfg.num_params()
+        assert 0.5 < actual / analytic < 2.0, (arch, actual, analytic)
+
+
+def test_pipeline_forward_matches_plain():
+    """GPipe stage-roll pipeline == plain forward (bubbles never collected)."""
+    from repro.launch.pipeline import pipeline_forward
+    cfg = get_smoke_config("qwen3-0.6b")
+    params = init_model(RNG, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (4, 16), 0,
+                                cfg.vocab_size)
+    ref, _ = forward(params, cfg, tokens)
+    got, _ = pipeline_forward(params, cfg, tokens, n_stages=2, n_micro=2,
+                              remat=False)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_flash_mla_matches_dense():
+    """Chunked latent-space (MLA) attention == dense path."""
+    from repro.models import layers as nn
+    cfg = get_smoke_config("minicpm3-4b")
+    p = nn.init_mla(jax.random.PRNGKey(2), cfg)
+    B, S = 2, 64
+    x = jax.random.normal(RNG, (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    dense = nn.mla_forward(p, cfg, x, pos, causal=True)
+    old_thr, old_chunk = nn.FLASH_THRESHOLD, nn.FLASH_KV_CHUNK
+    try:
+        nn.FLASH_THRESHOLD, nn.FLASH_KV_CHUNK = 1, 16
+        flash = nn.mla_forward(p, cfg, x, pos, causal=True)
+    finally:
+        nn.FLASH_THRESHOLD, nn.FLASH_KV_CHUNK = old_thr, old_chunk
+    np.testing.assert_allclose(np.asarray(flash, np.float32),
+                               np.asarray(dense, np.float32),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_flash_attention_matches_dense():
+    """The online-softmax chunked path == dense softmax attention."""
+    from repro.models import layers as nn
+    cfg = get_smoke_config("qwen3-0.6b")
+    p = nn.init_attention(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 64
+    x = jax.random.normal(RNG, (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, k, v = nn._project_qkv(p, cfg, x, pos)
+    it = jnp.arange(S)
+    mask = (it[None, :, None] >= it[None, None, :])[:, None, None, :, :]
+    dense = nn._sdpa(q, k, v, mask, cfg)
+    old_chunk = nn.FLASH_KV_CHUNK
+    try:
+        nn.FLASH_KV_CHUNK = 16
+        flash = nn._sdpa_chunked(q, k, v, cfg, causal=True)
+    finally:
+        nn.FLASH_KV_CHUNK = old_chunk
+    np.testing.assert_allclose(np.asarray(flash, np.float32),
+                               np.asarray(dense, np.float32),
+                               atol=2e-3, rtol=2e-3)

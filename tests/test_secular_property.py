@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) for the secular solver + merge core.
+
+System invariants under test:
+  * interlacing:  d_j < lam_j < d_{j+1}  (strict, active poles)
+  * agreement with dense numpy eigvalsh on diag(d) + rho z z^T
+  * deflation invariance: zero-weight poles pass through exactly
+  * shift invariance: spectrum(d + c) == spectrum(d) + c
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.secular import secular_solve, secular_eigenvalues
+
+
+def _solve(d, z2, rho, kprime, niter=24):
+    origin, tau = secular_solve(jnp.asarray(d), jnp.asarray(z2),
+                                rho, kprime, niter=niter)
+    return np.asarray(jnp.asarray(d)[origin] + tau)
+
+
+@st.composite
+def secular_problem(draw):
+    K = draw(st.integers(min_value=2, max_value=48))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    # separated poles (deflation is tested separately)
+    gaps = rng.uniform(0.05, 1.0, K)
+    d = np.cumsum(gaps)
+    z = rng.uniform(0.1, 1.0, K) * rng.choice([-1.0, 1.0], K)
+    z /= np.linalg.norm(z)
+    rho = float(draw(st.sampled_from([1e-3, 0.1, 1.0, 10.0])))
+    return d, z, rho
+
+
+@given(secular_problem())
+@settings(max_examples=40, deadline=None)
+def test_matches_dense_eigvalsh(prob):
+    d, z, rho = prob
+    K = len(d)
+    lam = np.sort(_solve(d, z * z, rho, K))
+    ref = np.linalg.eigvalsh(np.diag(d) + rho * np.outer(z, z))
+    scale = max(1.0, np.max(np.abs(ref)))
+    assert np.max(np.abs(lam - ref)) / scale < 1e-11
+
+
+@given(secular_problem())
+@settings(max_examples=40, deadline=None)
+def test_interlacing(prob):
+    d, z, rho = prob
+    K = len(d)
+    lam = _solve(d, z * z, rho, K)
+    span = rho * np.sum(z * z)
+    assert np.all(lam[:-1] > d[:-1]) and np.all(lam[:-1] < d[1:])
+    assert d[-1] < lam[-1] <= d[-1] + span + 1e-12
+
+
+@given(secular_problem(), st.integers(min_value=1, max_value=10))
+@settings(max_examples=25, deadline=None)
+def test_deflated_passthrough(prob, extra):
+    """Poles appended with z == 0 beyond kprime come back verbatim."""
+    d, z, rho = prob
+    K = len(d)
+    d_ext = np.concatenate([d, d[-1] + 1.0 + np.arange(extra)])
+    z2_ext = np.concatenate([z * z, np.zeros(extra)])
+    origin, tau = secular_solve(jnp.asarray(d_ext), jnp.asarray(z2_ext),
+                                rho, K, niter=24)
+    lam = np.asarray(jnp.asarray(d_ext)[origin] + tau)
+    np.testing.assert_array_equal(lam[K:], d_ext[K:])
+    ref = np.linalg.eigvalsh(np.diag(d) + rho * np.outer(z, z))
+    assert np.max(np.abs(np.sort(lam[:K]) - ref)) < 1e-10
+
+
+@given(secular_problem(), st.floats(min_value=-5.0, max_value=5.0,
+                                    allow_nan=False))
+@settings(max_examples=25, deadline=None)
+def test_shift_invariance(prob, shift):
+    d, z, rho = prob
+    K = len(d)
+    lam0 = np.sort(_solve(d, z * z, rho, K))
+    lam1 = np.sort(_solve(d + shift, z * z, rho, K))
+    assert np.max(np.abs(lam1 - (lam0 + shift))) < 1e-9
+
+
+@st.composite
+def tridiag_problem(draw):
+    n = draw(st.integers(min_value=4, max_value=120))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal(n)
+    e = rng.uniform(1e-3, 1.0, n - 1) * rng.choice([-1.0, 1.0], n - 1)
+    return d, e
+
+
+@given(tridiag_problem())
+@settings(max_examples=30, deadline=None)
+def test_br_full_pipeline_property(prob):
+    """End-to-end BR vs scipy on arbitrary tridiagonals (signs, scales)."""
+    import scipy.linalg as sla
+    from repro.core import eigvalsh_tridiagonal
+    d, e = prob
+    got = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8))
+    ref = sla.eigh_tridiagonal(d, np.abs(e), eigvals_only=True)
+    # |e| is WLOG: the tridiagonal spectrum is invariant to off-diag signs
+    scale = max(1.0, np.max(np.abs(ref)))
+    assert np.max(np.abs(got - ref)) / scale < 1e-11
