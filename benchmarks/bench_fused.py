@@ -1,0 +1,91 @@
+"""Fused single-pass conquer vs the legacy three-pass pipeline.
+
+Measures the tentpole claims end-to-end and in isolation:
+
+  * full solver wall time, fused (single delta pass, ratio-product zhat,
+    size-adaptive dense dispatch) vs legacy (chunked lax.map secular solve
+    + separate log-space zhat and boundary-row passes) at n in
+    {1024, 2048, 4096};
+  * the post-pass alone at the top-merge size (the bandwidth-bound kernel
+    the paper identifies);
+  * return_boundary on a padded size: one tracked-row solve vs the old
+    flip-identity double solve (simulated by solving the reversed problem
+    again, exactly what the old code did).
+
+A/B pairs are measured interleaved (common.time_pair) so load drift on
+shared hosts cannot masquerade as a speedup.  Rows feed
+BENCH_conquer.json via ``python -m benchmarks.run --json``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import time_pair
+from repro.core import eigvalsh_tridiagonal_br, make_family
+from repro.core import secular as sec
+
+
+def run(report, sizes=(1024, 2048, 4096)):
+    import jax
+
+    for n in sizes:
+        d, e = make_family("normal", n)
+
+        # Full BR conquer (boundary rows propagated through every merge,
+        # including the root -- eigenvalue-only root_mode skips the
+        # post-pass at the top merge entirely, in both pipelines).
+        t_legacy, t_fused = time_pair(
+            lambda: eigvalsh_tridiagonal_br(
+                d, e, return_boundary=True, fused=False).bhi,
+            lambda: eigvalsh_tridiagonal_br(
+                d, e, return_boundary=True, fused=True).bhi)
+        report(f"conquer_legacy3pass_n{n}", t_legacy, "baseline")
+        report(f"conquer_fused_n{n}", t_fused,
+               f"speedup={t_legacy / t_fused:.2f}x")
+
+        # Post-pass in isolation at the top-merge size K = n (jitted --
+        # the solver runs it inside one jit; unjitted lax.scan/map retrace
+        # per call and would measure tracing, not the kernel).
+        rng = np.random.default_rng(0)
+        K = n
+        dd = jnp.asarray(np.sort(rng.standard_normal(K)))
+        z = rng.standard_normal(K)
+        z /= np.linalg.norm(z)
+        z = jnp.asarray(z)
+        rho = 0.7
+        origin, tau = sec.secular_solve(dd, z * z, rho, K, niter=16)
+        R = jnp.asarray(rng.standard_normal((2, K)))
+
+        @jax.jit
+        def two_pass():
+            zh = sec.zhat_reconstruct(dd, z, origin, tau, K, rho)
+            return sec.boundary_rows_update(R, dd, zh, origin, tau, K)
+
+        @jax.jit
+        def one_pass():
+            return sec.secular_postpass(R, dd, z, origin, tau, K, rho)[1]
+
+        t2, t1 = time_pair(two_pass, one_pass)
+        report(f"postpass_twopass_K{K}", t2, "zhat + rows (2 delta sweeps)")
+        report(f"postpass_fused_K{K}", t1,
+               f"1 delta sweep, speedup={t2 / t1:.2f}x")
+
+    # --- padded return_boundary: tracked row vs flip double-solve ---------
+    n_pad = 3000                         # pads to N = 4096
+    d, e = make_family("normal", n_pad)
+
+    def single_solve():
+        return eigvalsh_tridiagonal_br(d, e, return_boundary=True).bhi
+
+    def double_solve():                  # what the pre-fusion code did
+        r1 = eigvalsh_tridiagonal_br(d, e, return_boundary=True)
+        r2 = eigvalsh_tridiagonal_br(d[::-1], e[::-1], return_boundary=True)
+        return r1.blo, r2.blo
+
+    t_double, t_single = time_pair(double_solve, single_solve, iters=3)
+    report(f"boundary_padded_double_n{n_pad}", t_double, "flip identity (old)")
+    report(f"boundary_padded_single_n{n_pad}", t_single,
+           f"tracked row, speedup={t_double / t_single:.2f}x")

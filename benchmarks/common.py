@@ -21,6 +21,25 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw):
     return best
 
 
+def time_pair(fn_a, fn_b, *, iters: int = 7):
+    """Best-of-iters wall times of two competing implementations, measured
+    INTERLEAVED (a, b, a, b, ...) so background-load drift hits both
+    equally.  Best-of (not mean/median) because scheduler/throttle spikes
+    only ever inflate a sample -- the minimum is the honest estimate of
+    each implementation's unloaded cost on shared hosts."""
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    return float(np.min(ta)), float(np.min(tb))
+
+
 def csv_row(name: str, seconds: float, derived: str = "") -> str:
     return f"{name},{seconds * 1e6:.1f},{derived}"
 

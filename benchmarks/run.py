@@ -1,13 +1,18 @@
 """Benchmark driver: one module per paper table + roofline aggregation.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME] [--json [PATH]]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  With ``--json`` the rows
+are also written as structured JSON (default path BENCH_conquer.json in
+the repo root) so perf PRs leave a machine-readable trajectory.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import time
 
 
@@ -16,20 +21,29 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes (CI-friendly)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", nargs="?", const="BENCH_conquer.json",
+                    default=None, metavar="PATH",
+                    help="also write results as JSON (default "
+                         "BENCH_conquer.json)")
     args = ap.parse_args(argv)
 
     import jax
     jax.config.update("jax_enable_x64", True)
 
-    from benchmarks import (bench_accuracy, bench_batched, bench_kernels,
-                            bench_scaling, bench_vs_lazy, bench_vs_sterf,
-                            bench_workspace, roofline)
+    from benchmarks import (bench_accuracy, bench_batched, bench_fused,
+                            bench_kernels, bench_scaling, bench_vs_lazy,
+                            bench_vs_sterf, bench_workspace, roofline)
 
     rows = []
+    records = []
+    current_suite = [""]
 
     def report(name, seconds, derived=""):
         line = f"{name},{seconds * 1e6:.1f},{derived}"
         rows.append(line)
+        records.append({"suite": current_suite[0], "name": name,
+                        "us_per_call": round(seconds * 1e6, 1),
+                        "derived": derived})
         print(line, flush=True)
 
     suites = {
@@ -48,6 +62,8 @@ def main(argv=None) -> None:
             report, n=1024 if args.quick else 4096),
         "kernels": lambda: bench_kernels.run(
             report, K=512 if args.quick else 2048),
+        "fused": lambda: bench_fused.run(
+            report, sizes=(512, 1024) if args.quick else (1024, 2048, 4096)),
         "roofline": lambda: roofline.run(report),
     }
 
@@ -56,6 +72,7 @@ def main(argv=None) -> None:
             continue
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
+        current_suite[0] = name
         try:
             fn()
         except Exception as e:  # keep the harness running
@@ -63,6 +80,23 @@ def main(argv=None) -> None:
         print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
 
     print(f"# total rows: {len(rows)}")
+
+    if args.json:
+        payload = {
+            "meta": {
+                "backend": jax.default_backend(),
+                "device": str(jax.devices()[0]),
+                "platform": platform.platform(),
+                "jax": jax.__version__,
+                "quick": bool(args.quick),
+                "only": args.only,
+                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            },
+            "rows": records,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {os.path.abspath(args.json)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,52 @@
+"""Version compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the current jax API (`jax.shard_map`,
+`jax.sharding.AxisType`); older runtimes (0.4.x) ship the same
+functionality under `jax.experimental.shard_map` with `check_rep`/`auto`
+spellings.  Everything funnels through here so call sites stay on the
+modern spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool | None = None):
+    """`jax.shard_map` with the modern kwargs on any jax version.
+
+    axis_names: the subset of mesh axes mapped Manually (the rest stay
+    Auto); None means all axes are Manual.
+    check_vma:  replication checking (older jax calls this check_rep).
+    """
+    check = True if check_vma is None else check_vma
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check, auto=auto)
+
+
+def make_mesh(axis_shapes, axis_names, *, auto_axes: bool = True):
+    """`jax.make_mesh` requesting Auto axis types when the runtime
+    supports explicit axis types (newer jax); plain mesh otherwise."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(AxisType.Auto,) * len(axis_names))
+    except (ImportError, TypeError, AttributeError):
+        if hasattr(jax, "make_mesh"):
+            return jax.make_mesh(axis_shapes, axis_names)
+        from jax.sharding import Mesh
+        import numpy as _np
+        return Mesh(_np.array(jax.devices()[: _np.prod(axis_shapes)])
+                    .reshape(axis_shapes), axis_names)

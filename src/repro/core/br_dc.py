@@ -7,11 +7,20 @@ analogue of the paper's per-level batched CUDA kernels (Section 4.1).
 Persistent eigenvector-derived state per level:
 
     lam   (num_nodes, node_size)      -- child spectra
-    rows  (num_nodes, 2, node_size)   -- (blo, bhi) boundary rows   <-- BR
+    rows  (num_nodes, r, node_size)   -- selected eigenvector-matrix rows
 
-i.e. 3N floats total, O(N).  Transients are O(chunk * K) by construction
-(see secular.py).  The conventional baselines in baselines.py carry
-quadratic state instead; nothing else differs.
+with r == 2 for the plain eigenvalue run (blo, bhi -- the rows that feed
+the rank-one coupling vectors) and r == 3 when boundary rows of the full
+matrix are requested on a padded problem: the third slot tracks the row at
+*original* index n-1 through the tree, so ``return_boundary`` costs one
+D&C solve even when padding appends sentinel rows below it (the old
+formulation re-ran the whole solver on the reversed problem to recover
+that row via the flip identity).
+
+State is 3N-4N floats total, O(N).  Transients are O(chunk * K) on
+streamed levels and O(B * K^2) <= O(N * stream_threshold) on dense levels
+(see merge.py's size-adaptive dispatch).  The conventional baselines in
+baselines.py carry quadratic state instead; nothing else differs.
 """
 
 from __future__ import annotations
@@ -24,6 +33,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import merge as _merge
+
+# Python-level call counter: regression tests assert that
+# return_boundary=True on a padded size performs exactly ONE solve (the
+# pre-fusion code recursed on the reversed problem to recover bhi).
+SOLVE_INVOCATIONS = 0
 
 
 class BRResult(NamedTuple):
@@ -55,12 +69,15 @@ def _pad_problem(d, e, leaf):
     return d_pad, e_pad, N, L
 
 
-def _leaf_solve(d_adj, e_pad, leaf):
+def _leaf_solve(d_adj, e_pad, leaf, track_local=None):
     """Batched leaf eigensolves (paper Sec. 4: parallel leaf initialization).
 
     Builds the (B, leaf, leaf) dense leaf blocks (off-diagonals at block
     boundaries excluded -- they are the rank-one couplings) and eigendecomposes
-    them in one batch.  Only the first/last eigenvector rows are kept.
+    them in one batch.  Keeps the first/last eigenvector rows, plus the row
+    at local index ``track_local`` when given (the selected-row slot that
+    follows original row n-1 through padding; only the leaf that actually
+    contains it propagates a meaningful value upward).
     """
     N = d_adj.shape[0]
     B = N // leaf
@@ -75,7 +92,10 @@ def _leaf_solve(d_adj, e_pad, leaf):
         j = jnp.arange(leaf - 1)
         T = T.at[:, j, j + 1].set(eb).at[:, j + 1, j].set(eb)
     lam, Q = jnp.linalg.eigh(T)          # ascending
-    rows = jnp.stack([Q[:, 0, :], Q[:, leaf - 1, :]], axis=1)  # (B, 2, leaf)
+    selected = [Q[:, 0, :], Q[:, leaf - 1, :]]
+    if track_local is not None:
+        selected.append(Q[:, track_local, :])
+    rows = jnp.stack(selected, axis=1)   # (B, r, leaf)
     return lam, rows
 
 
@@ -92,9 +112,11 @@ def _level_coupling(e_pad, level: int, leaf: int, num_merges: int):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "leaf", "chunk", "niter", "use_zhat", "return_boundary", "tol_factor"))
+    "leaf", "chunk", "niter", "use_zhat", "return_boundary", "tol_factor",
+    "stream_threshold", "fused", "track_idx"))
 def _br_dc_padded(d_pad, e_pad, *, leaf, chunk, niter, use_zhat,
-                  return_boundary, tol_factor):
+                  return_boundary, tol_factor, stream_threshold, fused,
+                  track_idx):
     N = d_pad.shape[0]
     L = int(math.log2(N // leaf))
 
@@ -108,7 +130,9 @@ def _br_dc_padded(d_pad, e_pad, *, leaf, chunk, niter, use_zhat,
     else:
         d_adj = d_pad
 
-    lam, rows = _leaf_solve(d_adj, e_pad, leaf)
+    track_local = None if track_idx is None else track_idx % leaf
+    lam, rows = _leaf_solve(d_adj, e_pad, leaf, track_local=track_local)
+    r = rows.shape[1]
 
     kprimes = []
     for level in range(L):
@@ -118,20 +142,31 @@ def _br_dc_padded(d_pad, e_pad, *, leaf, chunk, niter, use_zhat,
         rho, sgn = _level_coupling(e_pad, level, leaf, B)
 
         lam_pairs = lam.reshape(B, 2, M)
-        rows_pairs = rows.reshape(B, 2, 2, M)   # (B, child, {blo,bhi}, M)
+        rows_pairs = rows.reshape(B, 2, r, M)   # (B, child, slot, M)
         z_inner = jnp.stack(
             [rows_pairs[:, 0, 1, :], rows_pairs[:, 1, 0, :]], axis=1)
         zeros = jnp.zeros((B, M), lam.dtype)
-        # Parent blo source: [blo_L, 0]; parent bhi source: [0, bhi_R].
-        R = jnp.stack([
+        # Parent slot sources: blo <- [blo_L, 0]; bhi <- [0, bhi_R]; the
+        # tracked row lives in whichever child spans index track_idx at
+        # this level (a static side -- the same for every node; only the
+        # one node on the tracked row's spine carries a meaningful value).
+        selected = [
             jnp.concatenate([rows_pairs[:, 0, 0, :], zeros], axis=-1),
             jnp.concatenate([zeros, rows_pairs[:, 1, 1, :]], axis=-1),
-        ], axis=1)                                # (B, 2, 2M)
+        ]
+        if track_idx is not None:
+            side = (track_idx // M) % 2
+            selected.append(
+                jnp.concatenate([rows_pairs[:, 0, 2, :], zeros], axis=-1)
+                if side == 0 else
+                jnp.concatenate([zeros, rows_pairs[:, 1, 2, :]], axis=-1))
+        R = jnp.stack(selected, axis=1)           # (B, r, 2M)
 
         res = _merge.merge_level(
             lam_pairs, z_inner, R, rho, sgn,
             niter=niter, chunk=chunk, use_zhat=use_zhat,
-            root_mode=root, tol_factor=tol_factor)
+            root_mode=root, tol_factor=tol_factor,
+            stream_threshold=stream_threshold, fused=fused)
         lam, rows = res.lam, res.rows
         kprimes.append(res.kprime)
 
@@ -142,7 +177,9 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
                             niter: int = 16, use_zhat: bool = True,
                             return_boundary: bool = False,
                             tol_factor: float = 8.0,
-                            dtype=None, _flip_for_bhi: bool = True) -> BRResult:
+                            stream_threshold: int | None = None,
+                            fused: bool = True,
+                            dtype=None) -> BRResult:
     """All eigenvalues of the symmetric tridiagonal (d, e) via boundary-row D&C.
 
     O(n) auxiliary memory; same secular merges as conventional D&C
@@ -155,8 +192,20 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
       niter: fixed secular iteration budget.
       use_zhat: Gu-Eisenstat weight reconstruction for propagated rows.
       return_boundary: also return (blo, bhi) of the full eigenvector matrix
-        (propagates rows through the root merge -- tests/consumers).
+        (propagates rows through the root merge -- tests/consumers).  Costs
+        exactly one solve: on padded sizes the last *original* row is
+        tracked as an extra selected row instead of re-solving the flipped
+        problem.
+      stream_threshold: merges with K <= threshold take the dense
+        vectorized path (speed knob; larger values trade O(B K^2) transient
+        memory for batch parallelism at the bottom of the tree).  None
+        picks the backend-aware default: 0 on CPU (stream everything),
+        512 on accelerators (see merge.default_stream_threshold).
+      fused: use the single-pass fused conquer post-phase (False: legacy
+        two-pass, kept as benchmark baseline).
     """
+    global SOLVE_INVOCATIONS
+    SOLVE_INVOCATIONS += 1
     d = jnp.asarray(d)
     e = jnp.asarray(e)
     if dtype is not None:
@@ -169,46 +218,45 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
 
     d_pad, e_pad, N, L = _pad_problem(d, e, leaf)
     if L == 0:
-        # Single leaf: direct small solve.
-        lam, rows = _leaf_solve(d_pad, e_pad, N)
-        return BRResult(lam[0][:n], rows[0, 0, :n], rows[0, 1, :n], ())
+        # Single (possibly padded) leaf: direct small solve.  Track row
+        # n-1 explicitly -- with padding, row N-1 is a sentinel row whose
+        # support is disjoint from the true spectrum's columns.
+        lam, rows = _leaf_solve(d_pad, e_pad, N, track_local=n - 1)
+        return BRResult(lam[0][:n], rows[0, 0, :n], rows[0, 2, :n], ())
 
+    # The tracked third row is only needed when padding appends sentinel
+    # rows below row n-1; unpadded problems already carry it as bhi.
+    track_idx = n - 1 if (return_boundary and N != n) else None
     lam, rows, kprimes = _br_dc_padded(
         d_pad, e_pad, leaf=leaf, chunk=chunk, niter=niter,
         use_zhat=use_zhat, return_boundary=return_boundary,
-        tol_factor=tol_factor)
+        tol_factor=tol_factor, stream_threshold=stream_threshold,
+        fused=fused, track_idx=track_idx)
 
     lam = lam[:n]  # sentinels sort above the Gershgorin bound -> dropped
     if return_boundary:
-        bhi = rows[1, :n]
-        if N != n and _flip_for_bhi:
-            # Padding appends sentinel rows *below* row n-1, so the tracked
-            # "last row" is a pad row.  Recover the true last row via the
-            # flip identity bhi(T) = blo(J T J) (J T J has d, e reversed and
-            # the same ascending eigenvalue column order).
-            res_flip = eigvalsh_tridiagonal_br(
-                d[::-1], e[::-1], leaf=leaf, chunk=chunk, niter=niter,
-                use_zhat=use_zhat, return_boundary=True,
-                tol_factor=tol_factor, dtype=dtype, _flip_for_bhi=False)
-            bhi = res_flip.blo
+        bhi = rows[2, :n] if track_idx is not None else rows[1, :n]
         return BRResult(lam, rows[0, :n], bhi, tuple(kprimes))
     return BRResult(lam, None, None, tuple(kprimes))
 
 
 def workspace_model(n: int, leaf: int = 32, chunk: int = 128,
-                    itemsize: int = 8) -> dict:
+                    itemsize: int = 8, stream_threshold: int = 512) -> dict:
     """Analytic auxiliary-workspace model (Table 1 accounting).
 
     BR persistent state: lam (N) + rows (2N) + d,e inputs held once (2N);
-    transients: O(chunk * K) for the streamed secular evaluations at the top
-    merge plus the leaf eigendecomposition batch (N * leaf).
+    transients: the larger of the streamed secular evaluation at the top
+    merge, O(chunk * K), the dense small-K levels' batched tiles,
+    O(N * min(stream_threshold, N)), and the leaf eigendecomposition batch
+    (N * leaf).
     """
     N, _ = _tree_shape(n, leaf)
     persistent = 3 * N * itemsize
-    transient = (chunk * 2 * N + N * leaf) * itemsize
+    dense_tile = N * min(stream_threshold, N)
+    transient = (max(chunk * 2 * N, dense_tile) + N * leaf) * itemsize
     return {
         "persistent_bytes": persistent,
         "transient_bytes": transient,
         "total_bytes": persistent + transient,
-        "model": f"3N + (2*chunk + leaf)*N floats, N={N}",
+        "model": f"3N + (max(2*chunk, min(T,N)) + leaf)*N floats, N={N}",
     }

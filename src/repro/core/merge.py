@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import secular as _sec
+from repro.kernels import ops as _ops
 
 
 class MergeResult(NamedTuple):
@@ -112,9 +113,28 @@ def _close_pole_scan(d, z, R, small, tol):
     return d, z, R, defl
 
 
+DEFAULT_STREAM_THRESHOLD_ACCEL = 512
+
+
+def default_stream_threshold() -> int:
+    """Backend-aware dispatch default.
+
+    On accelerators, small-K levels pay for the chunked ``lax.map`` twice:
+    loop overhead AND serialization under the level vmap (large B, small K
+    -- the worst trade), so they go dense up to K=512.  On CPU a merge
+    with K <= chunk already runs as a single dense tile inside the
+    streaming wrapper and there is no vmap parallelism to unlock, so the
+    dense path is pure overhead: stream everything.
+    """
+    return 0 if jax.default_backend() == "cpu" \
+        else DEFAULT_STREAM_THRESHOLD_ACCEL
+
+
 def merge_node(dL, dR, zL, zR, R, rho, sgn, *,
                niter: int = 16, chunk: int = 256, use_zhat: bool = True,
-               root_mode: bool = False, tol_factor: float = 8.0) -> MergeResult:
+               root_mode: bool = False, tol_factor: float = 8.0,
+               stream_threshold: int | None = None,
+               fused: bool = True) -> MergeResult:
     """Merge one pair of solved children.  See module docstring.
 
     Args:
@@ -125,8 +145,21 @@ def merge_node(dL, dR, zL, zR, R, rho, sgn, *,
       rho: scalar >= 0, |e| at the split.
       sgn: +-1.0, sign of the split off-diagonal (absorbed into z, Eq. 3).
       root_mode: skip all row propagation (paper's root-only mode).
+      stream_threshold: size-adaptive dispatch -- merges with K at or below
+        it run the dense vectorized secular paths (one (K, K) tile, no
+        streaming loop; stays parallel under the level vmap where K is
+        small and the batch is large), larger merges stream in O(chunk * K)
+        tiles.  None: backend-aware default (see default_stream_threshold).
+      fused: single fused delta pass for the post-solve phase (zhat + row
+        update share each tile); False keeps the legacy two-pass form for
+        benchmarking/regression.
     """
     K = dL.shape[0] + dR.shape[0]
+    if stream_threshold is None:
+        stream_threshold = default_stream_threshold()
+    # fused=False reproduces the pre-fusion pipeline exactly (always
+    # streamed, two post-passes) as the benchmark baseline.
+    dense = fused and K <= stream_threshold
     dtype = dL.dtype
 
     d0 = jnp.concatenate([dL, dR])
@@ -161,14 +194,20 @@ def merge_node(dL, dR, zL, zR, R, rho, sgn, *,
     kprime = (K - jnp.sum(deflated)).astype(jnp.int32)
 
     # ---- secular root solve (compact delta representation) --------------
-    origin, tau = _sec.secular_solve(d, z * z, rho_eff, kprime,
-                                     niter=niter, chunk=chunk)
+    origin, tau = _ops.secular_solve(d, z * z, rho_eff, kprime,
+                                     niter=niter, chunk=chunk, dense=dense)
     lam = d[origin] + tau
 
     # ---- selected-row propagation (skipped at the root) ------------------
     if root_mode:
         rows = jnp.zeros_like(R)
+    elif fused:
+        # One pass over the delta structure for both zhat and the rows.
+        _, rows = _ops.secular_postpass(R, d, z, origin, tau, kprime,
+                                        rho_eff, use_zhat=use_zhat,
+                                        chunk=chunk, dense=dense)
     else:
+        # Legacy two-pass conquer (streams the delta structure twice).
         zr = z
         if use_zhat:
             zr = _sec.zhat_reconstruct(d, z, origin, tau, kprime, rho_eff,

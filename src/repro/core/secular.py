@@ -184,7 +184,8 @@ def _solve_chunk(jc, d, z2, rho, kprime, niter):
     return origin.astype(jnp.int32), tau.astype(dtype)
 
 
-def secular_solve(d, z2, rho, kprime, *, niter: int = 40, chunk: int = 128):
+def secular_solve(d, z2, rho, kprime, *, niter: int = 40, chunk: int = 128,
+                  dense: bool = False):
     """Find all K eigenvalues of diag(d) + rho * z z^T in compact delta form.
 
     Args:
@@ -195,12 +196,20 @@ def secular_solve(d, z2, rho, kprime, *, niter: int = 40, chunk: int = 128):
       kprime: traced int32 -- number of active (non-deflated) poles.
       niter: fixed safeguarded-iteration budget.
       chunk: roots per streamed chunk (memory = O(chunk * K)).
+      dense: solve every root in one vectorized batch (no streaming loop;
+        memory O(K^2)).  Per-root math is elementwise so results are
+        bit-identical to the chunked path -- this is the small-K fast path
+        used by the size-adaptive level dispatch (chunked ``lax.map``
+        serializes under vmap exactly where K is small and batch is large).
 
     Returns:
       (origin, tau): int32 (K,) and float (K,).  Eigenvalue j is
       ``d[origin[j]] + tau[j]``.  Deflated j get (j, 0) -- i.e. pass-through.
     """
     K = d.shape[0]
+    if dense:
+        jc = jnp.arange(K, dtype=jnp.int32)
+        return _solve_chunk(jc, d, z2, rho, kprime, niter)
     C = min(chunk, K)
     Kp = _pad_len(K, C)
     idx = jnp.arange(Kp, dtype=jnp.int32).reshape(-1, C)
@@ -302,3 +311,127 @@ def boundary_rows_update(R, d, z, origin, tau, kprime, *, chunk: int = 128):
     cols = jnp.moveaxis(cols, 1, 0).reshape(r, -1)[:, :K]
     active_j = (jnp.arange(K) < kprime)[None, :]
     return jnp.where(active_j, cols, R).astype(dtype)
+
+
+def _postpass_tile(ic, d, z, d_org, tau, kprime, rho, use_zhat):
+    """One fused (C, K) delta tile: rows = poles ``ic``, columns = all roots.
+
+    The tile ``lam_diff[c, j] = (d_org_j - d_i) + tau_j`` is formed ONCE and
+    serves both reductions:
+
+      * row-reduction over j -> Gu-Eisenstat weight zhat_i for the tile's
+        poles (DLAED3's ratio-product form: the full root range is resident
+        in the tile, so the numerator/denominator factors pair up as
+        interlaced ratios (lam_j - d_i)/(d_j - d_i) and zhat finalizes
+        inside the tile with plain products -- no log/exp.  Deflation
+        guarantees pole separation > tol, which bounds the partial
+        products; this is LAPACK's own unscaled formulation, and it is
+        what makes the fused pass decisively cheaper than the two-pass
+        log-space pipeline),
+      * the tile's poles' additive contribution to EVERY root column of the
+        selected-row update, using ``delta = -lam_diff`` and the freshly
+        reconstructed weights.
+
+    Returns (zhat_c (C,), y (C, K)) where y holds the *unnormalized* secular
+    eigenvector entries y_j(i) = w_i / ((d_i - d_org_j) - tau_j); column
+    norms are accumulated by the caller across tiles.
+    """
+    K = d.shape[0]
+    dtype = d.dtype
+    active_j = (jnp.arange(K) < kprime)[None, :]
+
+    ic_safe = jnp.minimum(ic, K - 1)
+    # valid poles: active AND not tail padding (padded ic duplicate pole
+    # K-1 and must contribute nothing; ic >= K implies ic >= kprime).
+    valid_i = ic < kprime
+    d_i = d[ic_safe]
+    z_i = z[ic_safe]
+
+    lam_diff = (d_org[None, :] - d_i[:, None]) + tau[None, :]      # (C, K)
+
+    if use_zhat:
+        pole_diff = d[None, :] - d_i[:, None]
+        selfmask = jnp.arange(K)[None, :] == ic_safe[:, None]
+        ok = active_j & ~selfmask
+        ratio = jnp.where(ok, lam_diff / jnp.where(ok, pole_diff, 1.0), 1.0)
+        prod = jnp.prod(ratio, axis=-1)
+        self_term = (d_org[ic_safe] - d_i) + tau[ic_safe]   # lam_i - d_i
+        z2hat = jnp.abs(prod * self_term) / rho
+        zhat_c = jnp.sign(z_i) * jnp.sqrt(z2hat)
+        zhat_c = jnp.where(valid_i, zhat_c, z_i).astype(dtype)
+        w = jnp.where(valid_i, zhat_c, 0.0)
+    else:
+        zhat_c = z_i
+        w = jnp.where(valid_i, z_i, 0.0)
+
+    delta = -lam_diff                         # (d_i - d_org_j) - tau_j
+    safe = jnp.where(valid_i[:, None] & (delta != 0.0), delta, 1.0)
+    y = jnp.where(valid_i[:, None], w[:, None] / safe, 0.0)        # (C, K)
+    return zhat_c, y
+
+
+def secular_postpass(R, d, z, origin, tau, kprime, rho, *,
+                     use_zhat: bool = True, chunk: int = 128,
+                     dense: bool = False):
+    """Fused conquer post-pass: weight reconstruction + selected-row update.
+
+    Replaces the two independent streamed passes ``zhat_reconstruct`` +
+    ``boundary_rows_update`` with a single sweep over the delta structure
+    ``(d_i - d_org_j) - tau_j``: each (chunk, K) tile is materialized once
+    and feeds both the Gu-Eisenstat weights and the r-row update (the merge
+    is bandwidth-bound, so halving the streamed traffic over the delta
+    structure is the paper's Section 4.1 lever).
+
+    The key reorganization vs the two-pass form: the sweep is chunked over
+    POLES (not roots).  A pole chunk's zhat only needs its own tile rows
+    (full root range, resident), so the reconstructed weights are final
+    within the tile and immediately usable for that chunk's additive
+    contribution to every root column; per-column norms accumulate across
+    chunks and are applied once at the end.
+
+    Args:
+      R: (r, K) selected child rows.  dense: single (K, K) vectorized tile
+      (no scan -- the small-K path that stays parallel under vmap).
+
+    Returns:
+      (zhat, rows): reconstructed weights (== z when use_zhat=False or
+      deflated) and the updated selected rows, matching the two-pass
+      ``zhat_reconstruct`` + ``boundary_rows_update`` composition to
+      rounding (the fused pass reconstructs weights in DLAED3's
+      ratio-product arithmetic, the two-pass form in log space).
+    """
+    r, K = R.shape
+    dtype = R.dtype
+
+    d_org = d[jnp.minimum(origin, K - 1)]
+    active_j = (jnp.arange(K) < kprime)[None, :]
+
+    if dense:
+        ic = jnp.arange(K, dtype=jnp.int32)
+        zhat, y = _postpass_tile(ic, d, z, d_org, tau, kprime, rho,
+                                 use_zhat)
+        cols = R @ y                                      # (r, K)
+        nrm2 = jnp.sum(y * y, axis=0)
+    else:
+        C = min(chunk, K)
+        Kp = _pad_len(K, C)
+        idx = jnp.arange(Kp, dtype=jnp.int32).reshape(-1, C)
+
+        def step(carry, ic):
+            cols_acc, nrm2_acc = carry
+            zhat_c, y = _postpass_tile(ic, d, z, d_org, tau, kprime,
+                                       rho, use_zhat)
+            Rc = jnp.take(R, jnp.minimum(ic, K - 1), axis=1)   # (r, C)
+            cols_acc = cols_acc + Rc @ y
+            nrm2_acc = nrm2_acc + jnp.sum(y * y, axis=0)
+            return (cols_acc, nrm2_acc), zhat_c
+
+        init = (jnp.zeros((r, K), dtype), jnp.zeros((K,), dtype))
+        (cols, nrm2), zhat_chunks = jax.lax.scan(step, init, idx)
+        zhat = zhat_chunks.reshape(-1)[:K]
+
+    nrm = jnp.sqrt(nrm2)
+    cols = cols / jnp.where(nrm > 0.0, nrm, 1.0)[None, :]
+    rows = jnp.where(active_j, cols, R).astype(dtype)
+    zhat = jnp.where(active_j[0], zhat, z).astype(dtype)
+    return zhat, rows

@@ -69,6 +69,19 @@ def make_family(family: str, n: int, dtype=np.float64, seed: int | None = None):
         m = (n - 1) / 2.0
         d = np.abs(i - 1 - m)
         e = np.ones(n - 1)
+    elif family == "glued_wilkinson":
+        # Copies of a small W^+ block glued with weak couplings (1e-4):
+        # the canonical deflation-heavy D&C stress input -- nearly every
+        # merge deflates almost everything (repeated eigenvalues across
+        # blocks + tiny z entries).  Not in FAMILIES (it exercises the
+        # deflation path, not general accuracy sweeps).
+        blk = min(21, n)
+        blk -= (blk % 2 == 0)           # odd Wilkinson block size
+        ib = np.arange(1, blk + 1, dtype=np.float64)
+        db = np.abs(ib - 1 - (blk - 1) / 2.0)
+        d = np.tile(db, n // blk + 1)[:n]
+        e = np.ones(n - 1)
+        e[blk - 1::blk] = 1e-4          # glue strength
     else:
         raise ValueError(f"unknown family: {family}")
     return d.astype(dtype), e.astype(dtype)

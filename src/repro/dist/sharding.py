@@ -1,0 +1,265 @@
+"""Sharding rules for the (pod, data, model) production meshes.
+
+Parameters carry *logical* axis names derived from their leaf name in the
+param pytree (layers.py documents the layout convention, e.g. wq:
+(d_model, heads, head_dim)).  `logical_param_specs` maps those logical
+axes onto mesh axes:
+
+    d_model-like dims  -> "data"   (FSDP: parameters sharded over the DP axis)
+    heads / ffn / V    -> "model"  (tensor parallel)
+
+Any dim whose size does not divide the mesh-axis extent is *pruned* to
+replicated (`_prune`) -- sharding is a best-effort layout hint, never a
+correctness requirement.
+
+Activation constraints (`constrain_batch_acts`, `constrain_seq_model_acts`)
+are trace-time switches: they no-op until `set_activation_mesh` installs a
+mesh, so smoke tests and single-device benchmarks run the exact same model
+code with zero sharding overhead.  Inside `shard_map` regions whose axes
+are Manual, constraints must not mention those axes -- `set_manual_axes`
+is the flag steps.py/pipeline.py flip around their mapped bodies.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Iterable, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Trace-time activation state
+# ---------------------------------------------------------------------------
+
+_ACTIVATION_MESH: Optional[Any] = None
+_SEQUENCE_PARALLEL: bool = False
+_MANUAL_AXES: frozenset = frozenset()
+
+
+def set_activation_mesh(mesh) -> None:
+    """Install (or clear, with None) the mesh used by activation constraints."""
+    global _ACTIVATION_MESH
+    _ACTIVATION_MESH = mesh
+
+
+def get_activation_mesh():
+    return _ACTIVATION_MESH
+
+
+def set_sequence_parallel(enabled: bool) -> None:
+    """Megatron-style sequence parallelism: the residual stream's seq dim is
+    sharded over 'model' between blocks (variant "sp" in dryrun)."""
+    global _SEQUENCE_PARALLEL
+    _SEQUENCE_PARALLEL = bool(enabled)
+
+
+def set_manual_axes(axes: Iterable[str]) -> None:
+    """Mesh axes currently Manual (inside a shard_map body): activation
+    constraints traced while this is set must not reference them."""
+    global _MANUAL_AXES
+    _MANUAL_AXES = frozenset(axes)
+
+
+def model_axis_extent() -> int:
+    """Extent of the tensor-parallel axis in the activation mesh (1 if unset)."""
+    mesh = _ACTIVATION_MESH
+    if mesh is None or "model" in _MANUAL_AXES:
+        return 1
+    return int(mesh.shape.get("model", 1))
+
+
+def dp_axis_extent() -> int:
+    """Product of the data-parallel-like extents ('pod' * 'data') visible to
+    the current trace (Manual axes excluded).  1 on a single device."""
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return 1
+    ext = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape and ax not in _MANUAL_AXES:
+            ext *= int(mesh.shape[ax])
+    return ext
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+
+def _extent(mesh, axis) -> int:
+    """Mesh extent of a spec entry (a name or a tuple of names)."""
+    names = axis if isinstance(axis, tuple) else (axis,)
+    return math.prod(int(mesh.shape[a]) for a in names)
+
+
+def _prune(axes, shape, mesh):
+    """Drop (replace with None) any sharded dim whose size does not divide
+    the mesh extent, or whose axis is absent from the mesh."""
+    out = []
+    for ax, dim in zip(axes, shape):
+        if ax is None:
+            out.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        if any(a not in mesh.shape for a in names):
+            out.append(None)
+            continue
+        out.append(ax if dim % _extent(mesh, ax) == 0 else None)
+    return tuple(out)
+
+
+# Trailing-dims rule per leaf name (layers.py layout convention).  Leaves
+# may carry extra *leading* dims (the scanned layer axis, MoE expert axis);
+# those replicate.  Unknown names replicate entirely.
+_NAME_RULES = {
+    # token embedding (V, D) / LM head (D, V)
+    "embed": ("model", "data"),
+    "head": ("data", "model"),
+    # attention projections (d_model, heads, head_dim) / (H, hd, d_model)
+    "wq": ("data", "model", None),
+    "wk": ("data", "model", None),
+    "wv": ("data", "model", None),
+    "wo": ("model", None, "data"),
+    # MLA low-rank factors
+    "wq_a": ("data", "model"),
+    "wq_b": ("data", "model", None),
+    "wkv_a": ("data", "model"),
+    "wk_b": ("data", "model", None),
+    "wv_b": ("data", "model", None),
+    # dense / MoE MLP (d, f) and (f, d); MoE adds a leading expert dim
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    # mamba2 projections (d, proj) / (dn, d)
+    "w_in": ("data", "model"),
+    "w_out": ("model", "data"),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def logical_param_specs(params, mesh):
+    """PartitionSpec pytree for a parameter pytree (shapes or arrays)."""
+    def spec_for(path, leaf):
+        rule = _NAME_RULES.get(_leaf_name(path))
+        ndim = len(leaf.shape)
+        if rule is None or ndim < len(rule):
+            return P()
+        axes = (None,) * (ndim - len(rule)) + tuple(rule)
+        return P(*_prune(axes, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def param_shardings(params, mesh):
+    """NamedSharding pytree matching `logical_param_specs`."""
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        logical_param_specs(params, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_axes(mesh, size: int):
+    """Best data-parallel spec entry for a dim of `size`: ('pod','data'),
+    'data', or None -- largest divisible combination wins."""
+    cands = []
+    if "pod" in mesh.shape and "data" in mesh.shape:
+        cands.append(("pod", "data"))
+    if "data" in mesh.shape:
+        cands.append("data")
+    if "pod" in mesh.shape:
+        cands.append("pod")
+    for c in cands:
+        if size % _extent(mesh, c) == 0 and _extent(mesh, c) > 1:
+            return c
+    return None
+
+
+def batch_sharding(mesh, global_batch: int, ndim: int = 2):
+    """Batch-first sharding for input/token arrays: dim 0 over the DP axes
+    (when divisible), everything else replicated."""
+    spec = [None] * ndim
+    if ndim:
+        spec[0] = _dp_axes(mesh, global_batch)
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(cache, cfg, mesh, batch: int):
+    """KV / SSM-state cache shardings: the batch dim (first dim of size
+    `batch`, searching from the left) goes over the DP axes; a kv-heads dim
+    (== cfg.num_kv_heads, right of batch) goes over 'model'.  Leaves with
+    no recognizable batch dim replicate."""
+    kv_heads = getattr(cfg, "num_kv_heads", 0)
+
+    def spec_for(leaf):
+        spec = [None] * len(leaf.shape)
+        b_at = None
+        for i, dim in enumerate(leaf.shape):
+            if dim == batch and i <= 1:
+                b_at = i
+                spec[i] = _dp_axes(mesh, batch)
+                break
+        if b_at is not None and kv_heads and "model" in mesh.shape:
+            for i in range(b_at + 1, len(leaf.shape)):
+                if leaf.shape[i] == kv_heads and \
+                        kv_heads % _extent(mesh, "model") == 0 and \
+                        _extent(mesh, "model") > 1:
+                    spec[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(spec_for, cache)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+def _constrain(x, spec):
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def _visible_dp_axes(mesh, size: int):
+    names = tuple(a for a in ("pod", "data")
+                  if a in mesh.shape and a not in _MANUAL_AXES)
+    while names and size % _extent(mesh, names):
+        names = names[1:]
+    if not names or _extent(mesh, names) == 1:
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def constrain_batch_acts(x):
+    """Pin an activation's batch dim to the visible data-parallel axes.
+    With sequence parallelism on, 3-D+ activations also pin seq->'model'."""
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return x
+    if _SEQUENCE_PARALLEL and x.ndim >= 3:
+        return constrain_seq_model_acts(x)
+    spec = [None] * x.ndim
+    spec[0] = _visible_dp_axes(mesh, x.shape[0])
+    return _constrain(x, spec)
+
+
+def constrain_seq_model_acts(x):
+    """(B, S, ...) activations: batch over DP axes, seq over 'model' --
+    used when heads don't divide the TP extent (and for sequence-parallel
+    residual streams)."""
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = _visible_dp_axes(mesh, x.shape[0])
+    if x.ndim >= 2 and "model" in mesh.shape and "model" not in _MANUAL_AXES \
+            and x.shape[1] % _extent(mesh, "model") == 0:
+        spec[1] = "model"
+    return _constrain(x, spec)

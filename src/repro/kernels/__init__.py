@@ -2,27 +2,34 @@
 
   secular_roots.py    -- batched secular root solve (CUDA block-reduction
                          analogue; grid over root blocks, pole-tile loop)
-  boundary_update.py  -- streamed 2-row selected-row update (the kernel that
-                         realizes the O(n) memory claim)
-  zhat.py             -- Gu-Eisenstat stable weight reconstruction
+  fused_update.py     -- fused conquer post-pass: one delta sweep emits the
+                         Gu-Eisenstat weights AND the selected-row update
+  boundary_update.py  -- streamed 2-row selected-row update (legacy
+                         two-pass form; reference/benchmark baseline)
+  zhat.py             -- Gu-Eisenstat stable weight reconstruction (legacy
+                         two-pass form)
 
-ops.py dispatches between the Pallas kernels (TPU / interpret) and the
-chunked XLA fallbacks; ref.py holds deliberately-naive dense oracles.
+ops.py dispatches between the Pallas kernels (TPU / interpret), the
+chunked XLA fallbacks, and the dense small-K path (size-adaptive level
+dispatch); ref.py holds deliberately-naive dense oracles.
 """
 
 from repro.kernels.ops import (
     boundary_rows_update,
     resolve_backend,
+    secular_postpass,
     secular_solve,
     set_backend,
     zhat_reconstruct,
 )
 from repro.kernels.secular_roots import secular_solve_pallas
 from repro.kernels.boundary_update import boundary_rows_update_pallas
+from repro.kernels.fused_update import secular_postpass_pallas
 from repro.kernels.zhat import zhat_reconstruct_pallas
 
 __all__ = [
     "boundary_rows_update", "boundary_rows_update_pallas", "resolve_backend",
+    "secular_postpass", "secular_postpass_pallas",
     "secular_solve", "secular_solve_pallas", "set_backend",
     "zhat_reconstruct", "zhat_reconstruct_pallas",
 ]

@@ -1,0 +1,202 @@
+"""Pallas TPU kernel: fused conquer post-pass (zhat + selected-row update).
+
+Single-kernel realization of ``core.secular.secular_postpass``: one sweep
+over the delta structure ``(d_i - d_org_j) - tau_j`` produces BOTH the
+Gu-Eisenstat reconstructed weights (DLAED3) and the r-row selected-row
+update (paper Lemma 3.2).  The two-kernel formulation reads the O(K)
+vectors (d, z, d_org, tau, R) from HBM twice and round-trips the full
+zhat vector through HBM between kernels; the fused kernel reads them once
+and keeps zhat in VMEM for the tile it was just reconstructed in -- the
+merge is bandwidth-bound (paper Section 4.1), so this halves the streamed
+traffic of the conquer post-phase.
+
+Grid mapping: one grid step per POLE block (C poles).  A pole block's zhat
+needs only its own rows of the delta structure over the full root range,
+which is exactly the (C, K) tile the step forms -- so zhat finalizes
+in-register and immediately weights the block's additive contribution to
+every root column.  Column contributions and squared norms accumulate
+across the (sequential) TPU grid into VMEM-resident output blocks; the
+O(K) normalization happens on the final grid step.
+
+VMEM budget per step: O(K) vectors + the (C, T) root-tile slab; the dense
+(K, K) secular eigenvector block is never materialized.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_POLE_BLOCK = 128
+DEFAULT_ROOT_TILE = 1024
+
+
+def _root_tile_for(Kp: int, root_tile: int) -> int:
+    """Largest tile <= root_tile that divides the padded length exactly
+    (tiles must never clamp: clamped dynamic_slice would double-count)."""
+    T = min(root_tile, Kp)
+    while Kp % T:
+        T //= 2
+    return max(T, 1)
+
+
+def _fused_kernel(R_ref, d_ref, z_ref, dorg_ref, tau_ref, rho_ref,
+                  kprime_ref, zhat_ref, cols_ref, nrm2_ref, *,
+                  root_tile, use_zhat):
+    r, Kp = R_ref.shape
+    C = zhat_ref.shape[0]
+    T = _root_tile_for(Kp, root_tile)
+    num_tiles = Kp // T
+    dtype = d_ref.dtype
+
+    d = d_ref[...]
+    z = z_ref[...]
+    d_org = dorg_ref[...]
+    tau = tau_ref[...]
+    rho = rho_ref[0]
+    kprime = kprime_ref[0]
+
+    i = pl.program_id(0)
+    num_blocks = pl.num_programs(0)
+    ic = i * C + jax.lax.iota(jnp.int32, C)
+    valid_i = ic < kprime            # active, non-padded poles only
+    d_i = d[ic]
+    z_i = z[ic]
+
+    @pl.when(i == 0)
+    def _init():
+        cols_ref[...] = jnp.zeros((r, Kp), dtype)
+        nrm2_ref[...] = jnp.zeros((Kp,), dtype)
+
+    # ---- phase 1: zhat for this pole block (row reduction over roots) ---
+    # DLAED3 ratio-product form: numerator/denominator factors pair up as
+    # interlaced ratios (lam_j - d_i)/(d_j - d_i), so the reduction is a
+    # plain product -- no log/exp in the sweep.  Deflation guarantees pole
+    # separation > tol, bounding the partials (LAPACK's own unscaled form).
+    def tile(t, prod):
+        start = (t * T).astype(jnp.int32)
+        dt = jax.lax.dynamic_slice(d, (start,), (T,))
+        dot = jax.lax.dynamic_slice(d_org, (start,), (T,))
+        tt = jax.lax.dynamic_slice(tau, (start,), (T,))
+        jt = start + jax.lax.iota(jnp.int32, T)
+        jmask = (jt < kprime)[None, :]
+        lam_diff = (dot[None, :] - d_i[:, None]) + tt[None, :]   # (C, T)
+        pole_diff = dt[None, :] - d_i[:, None]
+        selfmask = jt[None, :] == ic[:, None]
+        ok = jmask & ~selfmask
+        ratio = jnp.where(ok, lam_diff / jnp.where(ok, pole_diff, 1.0), 1.0)
+        return prod * jnp.prod(ratio, axis=-1)
+
+    if use_zhat:
+        prod = jax.lax.fori_loop(0, num_tiles, tile,
+                                 jnp.ones((C,), dtype))
+        self_term = (d_org[ic] - d_i) + tau[ic]            # lam_i - d_i
+        z2hat = jnp.abs(prod * self_term) / rho
+        zhat_c = jnp.sign(z_i) * jnp.sqrt(z2hat)
+        zhat_c = jnp.where(valid_i, zhat_c, z_i).astype(dtype)
+    else:
+        zhat_c = z_i
+    zhat_ref[...] = zhat_c
+    w = jnp.where(valid_i, zhat_c, 0.0)
+
+    # ---- phase 2: this block's contribution to every root column --------
+    # zhat is still in VMEM; no HBM round-trip between the phases.
+    Rc = jax.lax.dynamic_slice(
+        R_ref[...], (jnp.zeros((), jnp.int32), jnp.asarray(i * C, jnp.int32)),
+        (r, C))
+
+    def tile2(t, _):
+        start = (t * T).astype(jnp.int32)
+        dot = jax.lax.dynamic_slice(d_org, (start,), (T,))
+        tt = jax.lax.dynamic_slice(tau, (start,), (T,))
+        delta = (d_i[:, None] - dot[None, :]) - tt[None, :]      # (C, T)
+        ok = valid_i[:, None] & (delta != 0.0)
+        y = jnp.where(ok, w[:, None] / jnp.where(ok, delta, 1.0), 0.0)
+        contrib = jax.lax.dot_general(
+            Rc, y, (((1,), (0,)), ((), ())),
+            preferred_element_type=dtype)                        # (r, T)
+        prev = jax.lax.dynamic_slice(
+            cols_ref[...], (jnp.zeros((), jnp.int32), start), (r, T))
+        cols_ref[...] = jax.lax.dynamic_update_slice(
+            cols_ref[...], prev + contrib,
+            (jnp.zeros((), jnp.int32), start))
+        prevn = jax.lax.dynamic_slice(nrm2_ref[...], (start,), (T,))
+        nrm2_ref[...] = jax.lax.dynamic_update_slice(
+            nrm2_ref[...], prevn + jnp.sum(y * y, axis=0), (start,))
+        return 0
+
+    jax.lax.fori_loop(0, num_tiles, tile2, 0)
+
+    # Final grid step: apply the column normalization in-place.
+    @pl.when(i == num_blocks - 1)
+    def _finalize():
+        nrm = jnp.sqrt(nrm2_ref[...])
+        cols_ref[...] = cols_ref[...] / jnp.where(nrm > 0.0, nrm, 1.0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("use_zhat", "pole_block",
+                                             "root_tile", "interpret"))
+def secular_postpass_pallas(R, d, z, origin, tau, kprime, rho, *,
+                            use_zhat: bool = True,
+                            pole_block: int = DEFAULT_POLE_BLOCK,
+                            root_tile: int = DEFAULT_ROOT_TILE,
+                            interpret: bool = False):
+    """Fused Pallas post-pass.  Contract of core.secular.secular_postpass.
+
+    Returns (zhat, rows).  Both the pole and root index spaces are padded
+    to the pole-block multiple; padded poles satisfy ic >= K >= kprime and
+    contribute nothing, padded root columns are sliced off.
+    """
+    r, K = R.shape
+    C = min(pole_block, K)
+    grid = ((K + C - 1) // C,)
+    Kp = grid[0] * C
+
+    d_org = d[jnp.minimum(origin, K - 1)]
+    if Kp != K:
+        pad = Kp - K
+        R_p = jnp.pad(R, ((0, 0), (0, pad)))
+        d_p = jnp.pad(d, (0, pad))
+        z_p = jnp.pad(z, (0, pad))
+        dorg_p = jnp.pad(d_org, (0, pad))
+        tau_p = jnp.pad(tau, (0, pad))
+    else:
+        R_p, d_p, z_p, dorg_p, tau_p = R, d, z, d_org, tau
+
+    rho_arr = jnp.asarray(rho, d.dtype).reshape(1)
+    kp_arr = jnp.asarray(kprime, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_fused_kernel, root_tile=root_tile,
+                               use_zhat=use_zhat)
+    zhat, cols, nrm2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, Kp), lambda i: (0, 0)),  # R resident
+            pl.BlockSpec((Kp,), lambda i: (0,)),      # d
+            pl.BlockSpec((Kp,), lambda i: (0,)),      # z
+            pl.BlockSpec((Kp,), lambda i: (0,)),      # d[origin]
+            pl.BlockSpec((Kp,), lambda i: (0,)),      # tau
+            pl.BlockSpec((1,), lambda i: (0,)),       # rho
+            pl.BlockSpec((1,), lambda i: (0,)),       # kprime
+        ],
+        out_specs=[
+            pl.BlockSpec((C,), lambda i: (i,)),       # zhat, per pole block
+            pl.BlockSpec((r, Kp), lambda i: (0, 0)),  # cols accumulator
+            pl.BlockSpec((Kp,), lambda i: (0,)),      # nrm2 accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Kp,), d.dtype),
+            jax.ShapeDtypeStruct((r, Kp), R.dtype),
+            jax.ShapeDtypeStruct((Kp,), d.dtype),
+        ],
+        interpret=interpret,
+    )(R_p, d_p, z_p, dorg_p, tau_p, rho_arr, kp_arr)
+
+    active = jnp.arange(K) < kprime
+    zhat = jnp.where(active, zhat[:K], z).astype(d.dtype)
+    rows = jnp.where(active[None, :], cols[:, :K], R).astype(R.dtype)
+    return zhat, rows

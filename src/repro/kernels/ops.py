@@ -7,6 +7,13 @@
                 elsewhere (Python-level execution of the kernel body, used
                 by the test suite to validate the TPU kernels on CPU).
   * "auto"   -- "pallas" on TPU, "xla" otherwise.
+
+Size-adaptive dispatch: every op takes ``dense=`` -- when True (small K,
+decided per merge-tree level by ``stream_threshold``) the op runs the
+dense vectorized XLA path regardless of backend.  Small merges are
+launch/loop-overhead-bound, not bandwidth-bound, and the chunked/streamed
+formulations serialize under vmap exactly where K is small and the level
+batch is large; the dense path stays fully batched.
 """
 
 from __future__ import annotations
@@ -16,6 +23,7 @@ import jax
 from repro.core import secular as _sec
 from repro.kernels.secular_roots import secular_solve_pallas
 from repro.kernels.boundary_update import boundary_rows_update_pallas
+from repro.kernels.fused_update import secular_postpass_pallas
 from repro.kernels.zhat import zhat_reconstruct_pallas
 
 _BACKEND = "auto"
@@ -40,11 +48,29 @@ def _interpret() -> bool:
 
 
 def secular_solve(d, z2, rho, kprime, *, niter: int = 16, chunk: int = 256,
-                  backend: str | None = None):
+                  dense: bool = False, backend: str | None = None):
+    if dense:
+        return _sec.secular_solve(d, z2, rho, kprime, niter=niter,
+                                  dense=True)
     if resolve_backend(backend) == "pallas":
         return secular_solve_pallas(d, z2, rho, kprime, niter=niter,
                                     root_block=chunk, interpret=_interpret())
     return _sec.secular_solve(d, z2, rho, kprime, niter=niter, chunk=chunk)
+
+
+def secular_postpass(R, d, z, origin, tau, kprime, rho, *,
+                     use_zhat: bool = True, chunk: int = 256,
+                     dense: bool = False, backend: str | None = None):
+    """Fused zhat reconstruction + selected-row update: (zhat, rows)."""
+    if dense:
+        return _sec.secular_postpass(R, d, z, origin, tau, kprime, rho,
+                                     use_zhat=use_zhat, dense=True)
+    if resolve_backend(backend) == "pallas":
+        return secular_postpass_pallas(R, d, z, origin, tau, kprime, rho,
+                                       use_zhat=use_zhat, pole_block=chunk,
+                                       interpret=_interpret())
+    return _sec.secular_postpass(R, d, z, origin, tau, kprime, rho,
+                                 use_zhat=use_zhat, chunk=chunk)
 
 
 def boundary_rows_update(R, d, z, origin, tau, kprime, *, chunk: int = 256,

@@ -71,6 +71,17 @@ def boundary_rows_update_ref(R, d, z, origin, tau, kprime):
     return R @ Y
 
 
+def secular_postpass_ref(R, d, z, origin, tau, kprime, rho, *,
+                         use_zhat=True):
+    """Dense oracle for the fused post-pass: materializes everything the
+    fused kernel streams -- full zhat reconstruction followed by the dense
+    K x K row update.  Returns (zhat, rows)."""
+    zhat = zhat_reconstruct_ref(d, z, origin, tau, kprime, rho) if use_zhat \
+        else z
+    rows = boundary_rows_update_ref(R, d, zhat, origin, tau, kprime)
+    return zhat, rows
+
+
 def zhat_reconstruct_ref(d, z, origin, tau, kprime, rho):
     """Dense pairwise log-product oracle."""
     K = d.shape[0]

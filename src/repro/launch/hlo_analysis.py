@@ -145,6 +145,8 @@ def roofline_terms(flops: float, bytes_accessed: float,
 def analyze_compiled(compiled) -> dict:
     """All roofline inputs from one jax compiled object (per-chip)."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     bytes_acc = float(ca.get("bytes accessed", 0.0))
     coll = collective_bytes(compiled.as_text())

@@ -14,6 +14,7 @@ from repro.core import secular as sec
 from repro.kernels import ref
 from repro.kernels.secular_roots import secular_solve_pallas
 from repro.kernels.boundary_update import boundary_rows_update_pallas
+from repro.kernels.fused_update import secular_postpass_pallas
 from repro.kernels.zhat import zhat_reconstruct_pallas
 
 
@@ -99,6 +100,60 @@ def test_zhat_kernel(K, kprime):
     want = ref.zhat_reconstruct_ref(d, z, origin, tau, kprime, rho)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=1e-10, rtol=1e-8)
+
+
+@pytest.mark.parametrize("K,kprime", SHAPES)
+@pytest.mark.parametrize("r", [1, 2, 3])
+def test_fused_postpass_kernel_vs_oracle(K, kprime, r):
+    """The fused kernel's single delta sweep == dense zhat + dense row
+    update (the two intermediates it exists to avoid materializing)."""
+    rng = np.random.default_rng(6)
+    d, z, rho = _problem(K, kprime, seed=6)
+    origin, tau = sec.secular_solve(d, z * z, rho, kprime, niter=16)
+    R = jnp.asarray(rng.standard_normal((r, K)))
+    zh_p, rows_p = secular_postpass_pallas(
+        R, d, z, origin, tau, jnp.asarray(kprime),
+        jnp.asarray(rho, d.dtype), interpret=True)
+    zh_o, rows_o = ref.secular_postpass_ref(R, d, z, origin, tau, kprime, rho)
+    np.testing.assert_allclose(np.asarray(zh_p), np.asarray(zh_o),
+                               atol=1e-10, rtol=1e-8)
+    np.testing.assert_allclose(np.asarray(rows_p), np.asarray(rows_o),
+                               atol=1e-10, rtol=1e-8)
+
+
+@pytest.mark.parametrize("pole_block", [32, 128])
+@pytest.mark.parametrize("root_tile", [64, 1024])
+def test_fused_postpass_kernel_tiling_invariance(pole_block, root_tile):
+    """BlockSpec tiling is a perf knob, never a semantics knob."""
+    d, z, rho = _problem(200, 163, seed=7)
+    origin, tau = sec.secular_solve(d, z * z, rho, 163, niter=16)
+    R = jnp.asarray(np.random.default_rng(7).standard_normal((2, 200)))
+    args = (R, d, z, origin, tau, jnp.asarray(163), jnp.asarray(rho, d.dtype))
+    zh_t, rows_t = secular_postpass_pallas(*args, pole_block=pole_block,
+                                           root_tile=root_tile,
+                                           interpret=True)
+    zh_0, rows_0 = secular_postpass_pallas(*args, interpret=True)
+    np.testing.assert_allclose(np.asarray(zh_t), np.asarray(zh_0),
+                               atol=1e-13, rtol=0)
+    np.testing.assert_allclose(np.asarray(rows_t), np.asarray(rows_0),
+                               atol=1e-13, rtol=0)
+
+
+@pytest.mark.parametrize("K,kprime", [(64, 64), (130, 101)])
+def test_fused_postpass_kernel_vs_xla_fused(K, kprime):
+    """Pallas fused kernel vs the XLA fused path (same algorithm, same
+    single-sweep structure) -- agreement to near machine precision."""
+    d, z, rho = _problem(K, kprime, seed=8)
+    origin, tau = sec.secular_solve(d, z * z, rho, kprime, niter=16)
+    R = jnp.asarray(np.random.default_rng(8).standard_normal((2, K)))
+    zh_p, rows_p = secular_postpass_pallas(
+        R, d, z, origin, tau, jnp.asarray(kprime),
+        jnp.asarray(rho, d.dtype), interpret=True)
+    zh_x, rows_x = sec.secular_postpass(R, d, z, origin, tau, kprime, rho)
+    np.testing.assert_allclose(np.asarray(zh_p), np.asarray(zh_x),
+                               atol=1e-12, rtol=1e-10)
+    np.testing.assert_allclose(np.asarray(rows_p), np.asarray(rows_x),
+                               atol=1e-12, rtol=1e-10)
 
 
 def test_zhat_improves_or_matches_weights():

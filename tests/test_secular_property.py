@@ -9,6 +9,10 @@ System invariants under test:
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional dev dependency "
+    "`hypothesis` (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
