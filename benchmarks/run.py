@@ -25,7 +25,25 @@ def main(argv=None) -> None:
                     default=None, metavar="PATH",
                     help="also write results as JSON (default "
                          "BENCH_conquer.json)")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force this many XLA host CPU devices (default: "
+                         "cpu count) so batched solves shard across cores; "
+                         "0 leaves XLA_FLAGS untouched")
     args = ap.parse_args(argv)
+
+    # Must happen before the first jax import: forced host devices let the
+    # batched plan executor shard problem batches across CPU cores (the
+    # looped baselines are one problem wide and cannot use them).  Only
+    # `--only batched` runs get this by default -- partitioning the host
+    # would silently change the measured environment of every other
+    # suite and break comparability with committed snapshots (full-suite
+    # runs therefore record the batched rows UNSHARDED; pass
+    # --host-devices explicitly to override either way).
+    from repro.hostdev import force_host_devices  # jax-free
+    if args.host_devices is not None:
+        force_host_devices(args.host_devices)
+    elif args.only == "batched":
+        force_host_devices()
 
     import jax
     jax.config.update("jax_enable_x64", True)
@@ -53,8 +71,7 @@ def main(argv=None) -> None:
             sterf_max=1024 if args.quick else 2048),
         "vs_lazy": lambda: bench_vs_lazy.run(
             report, sizes=(512, 1024) if args.quick else (1024, 2048, 4096)),
-        "batched": lambda: bench_batched.run(
-            report, n=1024 if args.quick else 2048),
+        "batched": lambda: bench_batched.run(report, quick=args.quick),
         "scaling": lambda: bench_scaling.run(
             report, sizes=(256, 512, 1024) if args.quick
             else (512, 1024, 2048, 4096)),
@@ -86,6 +103,8 @@ def main(argv=None) -> None:
             "meta": {
                 "backend": jax.default_backend(),
                 "device": str(jax.devices()[0]),
+                "num_devices": len(jax.devices()),
+                "cpu_count": os.cpu_count(),
                 "platform": platform.platform(),
                 "jax": jax.__version__,
                 "quick": bool(args.quick),

@@ -7,9 +7,18 @@ against, all sharing one merge core so exact-arithmetic equivalence
 
 from repro.core.api import eigvalsh_tridiagonal, METHODS
 from repro.core.br_dc import (
+    BRBatchResult,
     BRResult,
+    SOLVE_COUNTER,
+    eigvalsh_tridiagonal_batch,
     eigvalsh_tridiagonal_br,
     workspace_model,
+)
+from repro.core.plan import (
+    SolvePlan,
+    clear_plan_cache,
+    make_plan,
+    plan_cache_stats,
 )
 from repro.core.sterf import eigvalsh_tridiagonal_sterf
 from repro.core.baselines import (
@@ -31,15 +40,20 @@ from repro.core.tridiag import (
     dense_from_tridiag,
     gershgorin_bounds,
     make_family,
+    make_family_batch,
 )
 
 __all__ = [
-    "BRResult", "FAMILIES", "METHODS",
-    "boundary_rows_update", "dense_from_tridiag",
+    "BRBatchResult", "BRResult", "FAMILIES", "METHODS", "SOLVE_COUNTER",
+    "SolvePlan", "boundary_rows_update", "clear_plan_cache",
+    "dense_from_tridiag",
     "eig_tridiagonal_full_dc", "eigvalsh_tridiagonal",
-    "eigvalsh_tridiagonal_br", "eigvalsh_tridiagonal_full_discard",
+    "eigvalsh_tridiagonal_batch", "eigvalsh_tridiagonal_br",
+    "eigvalsh_tridiagonal_full_discard",
     "eigvalsh_tridiagonal_lazy", "eigvalsh_tridiagonal_sterf",
-    "gershgorin_bounds", "make_family", "secular_eigenvalues",
+    "gershgorin_bounds", "make_family", "make_family_batch",
+    "make_plan", "plan_cache_stats",
+    "secular_eigenvalues",
     "secular_solve", "workspace_model", "workspace_model_full",
     "workspace_model_lazy", "workspace_model_sterf", "zhat_reconstruct",
 ]

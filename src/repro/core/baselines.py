@@ -40,7 +40,11 @@ def _prepare(d, e, leaf, dtype):
         d = d.astype(dtype)
         e = e.astype(dtype)
     n = d.shape[0]
-    d_pad, e_pad, N, L = _pad_problem(d, e, leaf)
+    # The br_dc helpers are batch-first; the baselines are single-problem
+    # by design (their whole point is quadratic per-problem state), so
+    # wrap/unwrap a singleton batch axis.
+    d_pad, e_pad, N, L = _pad_problem(d[None, :], e[None, :], leaf)
+    d_pad, e_pad = d_pad[0], e_pad[0]
     if N // leaf > 1:
         k = leaf * jnp.arange(1, N // leaf)
         rho_all = jnp.abs(e_pad[k - 1])
@@ -73,7 +77,8 @@ def _full_dc_jit(d_adj, e_pad, *, leaf, chunk, niter, use_zhat):
     for level in range(L):
         B = lam.shape[0] // 2
         M = lam.shape[1]
-        rho, sgn = _level_coupling(e_pad, level, leaf, B)
+        rho, sgn = _level_coupling(e_pad[None, :], level, leaf, B)
+        rho, sgn = rho[0], sgn[0]
         lam_pairs = lam.reshape(B, 2, M)
         Q_pairs = Q.reshape(B, 2, M, M)
         z_inner = jnp.stack(
@@ -96,7 +101,6 @@ def eig_tridiagonal_full_dc(d, e, *, leaf: int = 32, chunk: int = 128,
     """Conventional full-eigenvector D&C.  Returns (eigenvalues, Q)."""
     d_adj, e_pad, n, N, L = _prepare(d, e, leaf, dtype)
     if L == 0:
-        lam, rows = _leaf_solve(d_adj, e_pad, N)
         from repro.core.tridiag import dense_from_tridiag  # local import
         A = dense_from_tridiag(jnp.asarray(d), jnp.asarray(e))
         w, Q = jnp.linalg.eigh(A)
@@ -171,7 +175,8 @@ def _lazy_dc_jit(d_adj, e_pad, *, leaf, chunk, niter, use_zhat):
     for level in range(L):
         B = lam.shape[0] // 2
         M = lam.shape[1]
-        rho, sgn = _level_coupling(e_pad, level, leaf, B)
+        rho, sgn = _level_coupling(e_pad[None, :], level, leaf, B)
+        rho, sgn = rho[0], sgn[0]
         lam_pairs = lam.reshape(B, 2, M)
 
         # Reconstruct the needed boundary rows for every merge by replay.
@@ -199,8 +204,8 @@ def eigvalsh_tridiagonal_lazy(d, e, *, leaf: int = 32, chunk: int = 128,
     """Internal values-only D&C with lazy replay (quadratic workspace)."""
     d_adj, e_pad, n, N, L = _prepare(d, e, leaf, dtype)
     if L == 0:
-        lam, _ = _leaf_solve(d_adj, e_pad, N)
-        return lam[0][:n]
+        lam, _ = _leaf_solve(d_adj[None, :], e_pad[None, :], N)
+        return lam[0, 0][:n]
     lam = _lazy_dc_jit(d_adj, e_pad, leaf=leaf, chunk=chunk,
                        niter=niter, use_zhat=use_zhat)
     return lam[:n]

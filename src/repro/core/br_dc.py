@@ -1,31 +1,40 @@
-"""Boundary-row divide-and-conquer driver (paper Algorithm 1).
+"""Boundary-row divide-and-conquer driver (paper Algorithm 1), batch-first.
 
 Level-synchronous bottom-up realization of the recursion: all merges at the
 same tree depth are independent and executed as one vmapped batch -- the JAX
 analogue of the paper's per-level batched CUDA kernels (Section 4.1).
 
+The core is *batch-first*: every internal array carries a leading problem
+axis ``B`` and the per-level merge batch is the flattened ``B x num_nodes``
+product, so a batch of independent tridiagonals costs one executor launch
+and one XLA program (the distributed-memory hybrid-D&C direction of
+arXiv:1612.07526, realized here as a single fused level schedule).
 Persistent eigenvector-derived state per level:
 
-    lam   (num_nodes, node_size)      -- child spectra
-    rows  (num_nodes, r, node_size)   -- selected eigenvector-matrix rows
+    lam   (B, num_nodes, node_size)      -- child spectra
+    rows  (B, num_nodes, r, node_size)   -- selected eigenvector-matrix rows
 
 with r == 2 for the plain eigenvalue run (blo, bhi -- the rows that feed
 the rank-one coupling vectors) and r == 3 when boundary rows of the full
-matrix are requested on a padded problem: the third slot tracks the row at
-*original* index n-1 through the tree, so ``return_boundary`` costs one
-D&C solve even when padding appends sentinel rows below it (the old
-formulation re-ran the whole solver on the reversed problem to recover
-that row via the flip identity).
+matrix are requested: the third slot tracks the row at *original* index
+n-1 through the tree (a traced per-problem index, so mixed original sizes
+inside one padded bucket share one compiled executable), which keeps
+``return_boundary`` at one D&C solve even when padding appends sentinel
+rows below it.
 
-State is 3N-4N floats total, O(N).  Transients are O(chunk * K) on
-streamed levels and O(B * K^2) <= O(N * stream_threshold) on dense levels
-(see merge.py's size-adaptive dispatch).  The conventional baselines in
-baselines.py carry quadratic state instead; nothing else differs.
+State is B * (3N-4N) floats total, B * O(N).  Transients are
+O(B * chunk * K) on streamed levels and O(B * nodes * K^2) <=
+O(B * N * stream_threshold) on dense levels (see merge.py's size-adaptive
+dispatch).  The conventional baselines in baselines.py carry quadratic
+state instead; nothing else differs.
+
+Compilation is owned by ``repro.core.plan``: both public drivers below
+build a :class:`~repro.core.plan.SolvePlan` (single solves are the
+batch == 1 bucket) and run its cached executor.
 """
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import NamedTuple
 
@@ -33,11 +42,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import merge as _merge
+from repro.core.instrument import SolveCounter
 
-# Python-level call counter: regression tests assert that
-# return_boundary=True on a padded size performs exactly ONE solve (the
-# pre-fusion code recursed on the reversed problem to recover bhi).
-SOLVE_INVOCATIONS = 0
+# Device-solve instrumentation: one increment per executor launch (a batch
+# of B problems is ONE solve).  Regression tests pin one-solve invariants
+# (padded ``return_boundary``, whole-batch SLQ) through this counter.
+SOLVE_COUNTER = SolveCounter("device_solves")
 
 
 class BRResult(NamedTuple):
@@ -45,6 +55,13 @@ class BRResult(NamedTuple):
     blo: jax.Array | None      # (n,) first row of Q (None in root mode)
     bhi: jax.Array | None      # (n,) last row of Q
     kprime_per_level: tuple    # diagnostics: active ranks per level
+
+
+class BRBatchResult(NamedTuple):
+    eigenvalues: jax.Array     # (B, n) ascending per problem
+    blo: jax.Array | None      # (B, n) first rows of Q (None unless requested)
+    bhi: jax.Array | None      # (B, n) last rows of Q
+    kprime_per_level: tuple    # diagnostics: (B, num_merges) per level
 
 
 def _tree_shape(n: int, leaf: int):
@@ -55,122 +72,201 @@ def _tree_shape(n: int, leaf: int):
 
 
 def _pad_problem(d, e, leaf):
-    """Pad to N = leaf * 2^L with decoupled sentinel 1x1 blocks (exact)."""
-    n = d.shape[0]
+    """Pad a batch to N = leaf * 2^L with decoupled sentinel 1x1 blocks.
+
+    d: (B, n), e: (B, n-1).  Returns (d_pad (B, N), e_pad (B, N), N, L);
+    e is padded to length N for uniform split indexing.  Sentinels sit
+    above each problem's own Gershgorin upper bound, so pads sort to the
+    top and deflate exactly (their z entries are identically zero).
+    """
+    B, n = d.shape
     N, L = _tree_shape(n, leaf)
     if N == n:
-        return d, jnp.pad(e, (0, 1)), N, L  # e padded to length N for indexing
-    # Sentinel above the Gershgorin upper bound: pads sort to the top and
-    # deflate exactly (their z entries are identically zero since e = 0).
-    hi = jnp.max(jnp.abs(d)) + 2.0 * (jnp.max(jnp.abs(e)) if e.shape[0] else 0.0)
-    sentinel = hi + 1.0
-    d_pad = jnp.concatenate([d, jnp.full((N - n,), sentinel, d.dtype)])
-    e_pad = jnp.concatenate([e, jnp.zeros((N - n + 1,), d.dtype)])
+        return d, jnp.pad(e, ((0, 0), (0, 1))), N, L
+    emax = (jnp.max(jnp.abs(e), axis=1) if e.shape[1]
+            else jnp.zeros((B,), d.dtype))
+    sentinel = jnp.max(jnp.abs(d), axis=1) + 2.0 * emax + 1.0
+    d_pad = jnp.concatenate(
+        [d, jnp.broadcast_to(sentinel[:, None], (B, N - n)).astype(d.dtype)],
+        axis=1)
+    e_pad = jnp.concatenate([e, jnp.zeros((B, N - n + 1), d.dtype)], axis=1)
     return d_pad, e_pad, N, L
 
 
 def _leaf_solve(d_adj, e_pad, leaf, track_local=None):
     """Batched leaf eigensolves (paper Sec. 4: parallel leaf initialization).
 
-    Builds the (B, leaf, leaf) dense leaf blocks (off-diagonals at block
-    boundaries excluded -- they are the rank-one couplings) and eigendecomposes
-    them in one batch.  Keeps the first/last eigenvector rows, plus the row
-    at local index ``track_local`` when given (the selected-row slot that
-    follows original row n-1 through padding; only the leaf that actually
-    contains it propagates a meaningful value upward).
+    d_adj, e_pad: (B, N).  Builds the (B, nb, leaf, leaf) dense leaf blocks
+    (off-diagonals at block boundaries excluded -- they are the rank-one
+    couplings) and eigendecomposes them in one batch.  Keeps the first/last
+    eigenvector rows, plus the per-problem row at local index
+    ``track_local`` ((B,) int32, traced) when given -- the selected-row
+    slot that follows original row n-1 through padding; only the leaf that
+    actually contains it propagates a meaningful value upward.
+
+    Returns (lam (B, nb, leaf), rows (B, nb, r, leaf)).
     """
-    N = d_adj.shape[0]
-    B = N // leaf
-    db = d_adj.reshape(B, leaf)
+    B, N = d_adj.shape
+    nb = N // leaf
+    db = d_adj.reshape(B, nb, leaf)
     # e within a block: positions [b*leaf, b*leaf + leaf - 2]
-    eb = e_pad[: N].reshape(B, leaf)[:, : leaf - 1] if leaf > 1 else None
+    eb = (e_pad[:, :N].reshape(B, nb, leaf)[:, :, : leaf - 1]
+          if leaf > 1 else None)
 
     ii = jnp.arange(leaf)
-    T = jnp.zeros((B, leaf, leaf), d_adj.dtype)
-    T = T.at[:, ii, ii].set(db)
+    T = jnp.zeros((B, nb, leaf, leaf), d_adj.dtype)
+    T = T.at[:, :, ii, ii].set(db)
     if leaf > 1:
         j = jnp.arange(leaf - 1)
-        T = T.at[:, j, j + 1].set(eb).at[:, j + 1, j].set(eb)
+        T = T.at[:, :, j, j + 1].set(eb).at[:, :, j + 1, j].set(eb)
     lam, Q = jnp.linalg.eigh(T)          # ascending
-    selected = [Q[:, 0, :], Q[:, leaf - 1, :]]
+    selected = [Q[:, :, 0, :], Q[:, :, leaf - 1, :]]
     if track_local is not None:
-        selected.append(Q[:, track_local, :])
-    rows = jnp.stack(selected, axis=1)   # (B, r, leaf)
+        tl = jnp.asarray(track_local, jnp.int32)
+        idx = jnp.broadcast_to(tl[:, None, None, None], (B, nb, 1, leaf))
+        selected.append(jnp.take_along_axis(Q, idx, axis=2)[:, :, 0, :])
+    rows = jnp.stack(selected, axis=2)   # (B, nb, r, leaf)
     return lam, rows
 
 
 def _level_coupling(e_pad, level: int, leaf: int, num_merges: int):
-    """(rho, sgn) for every merge at this level.
+    """(rho, sgn), each (B, num_merges), for every merge at this level.
 
     Merge i at level ``level`` joins nodes of size M = leaf * 2^level; the
     split sits at original index k = (2i+1) * M, coupling strength e[k-1].
     """
     M = leaf * (1 << level)
     k = (2 * jnp.arange(num_merges) + 1) * M
-    beta = e_pad[k - 1]
+    beta = e_pad[:, k - 1]
     return jnp.abs(beta), jnp.where(beta >= 0.0, 1.0, -1.0).astype(e_pad.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "leaf", "chunk", "niter", "use_zhat", "return_boundary", "tol_factor",
-    "stream_threshold", "fused", "track_idx"))
-def _br_dc_padded(d_pad, e_pad, *, leaf, chunk, niter, use_zhat,
-                  return_boundary, tol_factor, stream_threshold, fused,
-                  track_idx):
-    N = d_pad.shape[0]
+def _br_dc_padded_batch(d_pad, e_pad, track, *, leaf, chunk, niter, use_zhat,
+                        return_boundary, tol_factor, stream_threshold,
+                        fused):
+    """Batch-first padded D&C body (traced; jitted by plan._executor).
+
+    d_pad, e_pad: (B, N); track: (B,) int32 per-problem tracked original
+    row index, or None.  Returns (lam (B, N), rows (B, r, N), kprimes:
+    list of (B, num_merges) per level).
+    """
+    B, N = d_pad.shape
     L = int(math.log2(N // leaf))
+    nb = N // leaf
 
     # Pre-subtract every rank-one coupling from the boundary diagonals
     # (each interior leaf boundary is split exactly once in the tree).
-    if N // leaf > 1:
-        k = leaf * jnp.arange(1, N // leaf)
-        rho_all = jnp.abs(e_pad[k - 1])
-        sub = jnp.zeros_like(d_pad).at[k - 1].add(rho_all).at[k].add(rho_all)
+    if nb > 1:
+        k = leaf * jnp.arange(1, nb)
+        rho_all = jnp.abs(e_pad[:, k - 1])
+        sub = jnp.zeros_like(d_pad).at[:, k - 1].add(rho_all) \
+                                   .at[:, k].add(rho_all)
         d_adj = d_pad - sub
     else:
         d_adj = d_pad
 
-    track_local = None if track_idx is None else track_idx % leaf
+    track_local = None if track is None else track % leaf
     lam, rows = _leaf_solve(d_adj, e_pad, leaf, track_local=track_local)
-    r = rows.shape[1]
+    r = rows.shape[2]
 
     kprimes = []
     for level in range(L):
-        B = lam.shape[0] // 2
-        M = lam.shape[1]
-        root = (B == 1) and not return_boundary
-        rho, sgn = _level_coupling(e_pad, level, leaf, B)
+        nm = lam.shape[1] // 2
+        M = lam.shape[2]
+        root = (nm == 1) and not return_boundary
+        rho, sgn = _level_coupling(e_pad, level, leaf, nm)   # (B, nm)
 
-        lam_pairs = lam.reshape(B, 2, M)
-        rows_pairs = rows.reshape(B, 2, r, M)   # (B, child, slot, M)
+        lam_pairs = lam.reshape(B, nm, 2, M)
+        rows_pairs = rows.reshape(B, nm, 2, r, M)  # (B, merge, child, slot, M)
         z_inner = jnp.stack(
-            [rows_pairs[:, 0, 1, :], rows_pairs[:, 1, 0, :]], axis=1)
-        zeros = jnp.zeros((B, M), lam.dtype)
+            [rows_pairs[:, :, 0, 1, :], rows_pairs[:, :, 1, 0, :]], axis=2)
+        zeros = jnp.zeros((B, nm, M), lam.dtype)
         # Parent slot sources: blo <- [blo_L, 0]; bhi <- [0, bhi_R]; the
-        # tracked row lives in whichever child spans index track_idx at
-        # this level (a static side -- the same for every node; only the
-        # one node on the tracked row's spine carries a meaningful value).
+        # tracked row lives in whichever child spans index track[b] at
+        # this level -- a traced per-problem side, identical for every
+        # node of that problem (only the one node on the tracked row's
+        # spine carries a meaningful value).
         selected = [
-            jnp.concatenate([rows_pairs[:, 0, 0, :], zeros], axis=-1),
-            jnp.concatenate([zeros, rows_pairs[:, 1, 1, :]], axis=-1),
+            jnp.concatenate([rows_pairs[:, :, 0, 0, :], zeros], axis=-1),
+            jnp.concatenate([zeros, rows_pairs[:, :, 1, 1, :]], axis=-1),
         ]
-        if track_idx is not None:
-            side = (track_idx // M) % 2
+        if track is not None:
+            side = (track // M) % 2                            # (B,)
+            left = jnp.concatenate([rows_pairs[:, :, 0, 2, :], zeros],
+                                   axis=-1)
+            right = jnp.concatenate([zeros, rows_pairs[:, :, 1, 2, :]],
+                                    axis=-1)
             selected.append(
-                jnp.concatenate([rows_pairs[:, 0, 2, :], zeros], axis=-1)
-                if side == 0 else
-                jnp.concatenate([zeros, rows_pairs[:, 1, 2, :]], axis=-1))
-        R = jnp.stack(selected, axis=1)           # (B, r, 2M)
+                jnp.where((side == 0)[:, None, None], left, right))
+        R = jnp.stack(selected, axis=2)           # (B, nm, r, 2M)
 
-        res = _merge.merge_level(
+        res = _merge.merge_level_batched(
             lam_pairs, z_inner, R, rho, sgn,
             niter=niter, chunk=chunk, use_zhat=use_zhat,
             root_mode=root, tol_factor=tol_factor,
             stream_threshold=stream_threshold, fused=fused)
-        lam, rows = res.lam, res.rows
-        kprimes.append(res.kprime)
+        lam, rows = res.lam, res.rows             # (B, nm, 2M) / (B, nm, r, 2M)
+        kprimes.append(res.kprime)                # (B, nm)
 
-    return lam[0], rows[0], kprimes
+    return lam[:, 0], rows[:, 0], kprimes
+
+
+def _as_batch(d, e, dtype):
+    d = jnp.asarray(d)
+    e = jnp.asarray(e)
+    if dtype is not None:
+        d = d.astype(dtype)
+        e = e.astype(dtype)
+    if (d.ndim != 2 or e.ndim != 2 or e.shape[0] != d.shape[0]
+            or e.shape[1] != max(d.shape[1] - 1, 0)):
+        raise ValueError(
+            f"batched solve expects d (B, n) and e (B, n-1); "
+            f"got {d.shape} / {e.shape}")
+    return d, e
+
+
+def eigvalsh_tridiagonal_batch(d, e, *, leaf: int = 32, chunk: int = 256,
+                               niter: int = 16, use_zhat: bool = True,
+                               return_boundary: bool = False,
+                               tol_factor: float = 8.0,
+                               stream_threshold: int | None = None,
+                               fused: bool = True,
+                               dtype=None) -> BRBatchResult:
+    """All eigenvalues of B independent symmetric tridiagonals at once.
+
+    One executor launch, one XLA program, B * O(n) persistent state: the
+    per-level merge batch absorbs the problem axis, so every secular
+    solve / deflation scan across the whole batch runs in a single
+    vectorized sweep.  Compiled executables are cached per
+    ``(padded N, leaf, batch bucket, dtype, flags)`` bucket with batch
+    buckets rounded up to powers of two (see ``repro.core.plan``), so
+    arbitrary request batches hit a handful of traces.
+
+    Args:
+      d: (B, n) diagonals.  e: (B, n-1) off-diagonals.
+      return_boundary: also return (blo, bhi) of each problem's full
+        eigenvector matrix (one extra tracked selected row; still one
+        solve).
+      Remaining knobs as in :func:`eigvalsh_tridiagonal_br`.
+
+    Returns:
+      BRBatchResult with eigenvalues (B, n) ascending per problem.
+    """
+    d, e = _as_batch(d, e, dtype)
+    B, n = d.shape
+    if n == 1:
+        ones = jnp.ones((B, 1), d.dtype)
+        SOLVE_COUNTER.increment()
+        return BRBatchResult(d, ones if return_boundary else None,
+                             ones if return_boundary else None, ())
+
+    from repro.core import plan as _plan  # deferred: plan imports br_dc
+    p = _plan.make_plan(n, B, leaf=leaf, chunk=chunk, niter=niter,
+                        use_zhat=use_zhat, return_boundary=return_boundary,
+                        tol_factor=tol_factor,
+                        stream_threshold=stream_threshold, fused=fused,
+                        dtype=d.dtype)
+    return p.execute(d, e)
 
 
 def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
@@ -183,7 +279,9 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
     """All eigenvalues of the symmetric tridiagonal (d, e) via boundary-row D&C.
 
     O(n) auxiliary memory; same secular merges as conventional D&C
-    (paper Theorem 3.3).
+    (paper Theorem 3.3).  A single solve is the batch == 1 bucket of the
+    plan/executor core -- see :func:`eigvalsh_tridiagonal_batch` for the
+    many-problem front door sharing the same compiled executables.
 
     Args:
       d: (n,) diagonal.  e: (n-1,) off-diagonal.
@@ -204,8 +302,6 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
       fused: use the single-pass fused conquer post-phase (False: legacy
         two-pass, kept as benchmark baseline).
     """
-    global SOLVE_INVOCATIONS
-    SOLVE_INVOCATIONS += 1
     d = jnp.asarray(d)
     e = jnp.asarray(e)
     if dtype is not None:
@@ -214,49 +310,49 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
     n = d.shape[0]
     if n == 1:
         one = jnp.ones((1,), d.dtype)
+        SOLVE_COUNTER.increment()
         return BRResult(d, one, one, ())
 
-    d_pad, e_pad, N, L = _pad_problem(d, e, leaf)
-    if L == 0:
-        # Single (possibly padded) leaf: direct small solve.  Track row
-        # n-1 explicitly -- with padding, row N-1 is a sentinel row whose
-        # support is disjoint from the true spectrum's columns.
-        lam, rows = _leaf_solve(d_pad, e_pad, N, track_local=n - 1)
-        return BRResult(lam[0][:n], rows[0, 0, :n], rows[0, 2, :n], ())
-
-    # The tracked third row is only needed when padding appends sentinel
-    # rows below row n-1; unpadded problems already carry it as bhi.
-    track_idx = n - 1 if (return_boundary and N != n) else None
-    lam, rows, kprimes = _br_dc_padded(
-        d_pad, e_pad, leaf=leaf, chunk=chunk, niter=niter,
-        use_zhat=use_zhat, return_boundary=return_boundary,
-        tol_factor=tol_factor, stream_threshold=stream_threshold,
-        fused=fused, track_idx=track_idx)
-
-    lam = lam[:n]  # sentinels sort above the Gershgorin bound -> dropped
-    if return_boundary:
-        bhi = rows[2, :n] if track_idx is not None else rows[1, :n]
-        return BRResult(lam, rows[0, :n], bhi, tuple(kprimes))
-    return BRResult(lam, None, None, tuple(kprimes))
+    N, L = _tree_shape(n, leaf)
+    from repro.core import plan as _plan  # deferred: plan imports br_dc
+    # Single (possibly padded) leaf trees carry their boundary rows for
+    # free (no root merge to skip them at), matching the historical
+    # contract that L == 0 always returns (blo, bhi).
+    p = _plan.make_plan(n, 1, leaf=leaf, chunk=chunk, niter=niter,
+                        use_zhat=use_zhat,
+                        return_boundary=return_boundary or L == 0,
+                        tol_factor=tol_factor,
+                        stream_threshold=stream_threshold, fused=fused,
+                        dtype=d.dtype)
+    res = p.execute(d[None, :], e[None, :])
+    blo = None if res.blo is None else res.blo[0]
+    bhi = None if res.bhi is None else res.bhi[0]
+    return BRResult(res.eigenvalues[0], blo, bhi,
+                    tuple(k[0] for k in res.kprime_per_level))
 
 
 def workspace_model(n: int, leaf: int = 32, chunk: int = 128,
-                    itemsize: int = 8, stream_threshold: int = 512) -> dict:
+                    itemsize: int = 8, stream_threshold: int = 512,
+                    batch: int = 1) -> dict:
     """Analytic auxiliary-workspace model (Table 1 accounting).
 
-    BR persistent state: lam (N) + rows (2N) + d,e inputs held once (2N);
-    transients: the larger of the streamed secular evaluation at the top
-    merge, O(chunk * K), the dense small-K levels' batched tiles,
-    O(N * min(stream_threshold, N)), and the leaf eigendecomposition batch
-    (N * leaf).
+    BR persistent state per problem: lam (N) + rows (2N) + d,e inputs held
+    once (2N); transients: the larger of the streamed secular evaluation
+    at the top merge, O(chunk * K), the dense small-K levels' batched
+    tiles, O(N * min(stream_threshold, N)), and the leaf
+    eigendecomposition batch (N * leaf).  A batch of B problems scales
+    every term linearly: B * O(N) persistent -- the memory model that
+    makes many-problem workloads viable (the lazy/full baselines would
+    pay B * O(N^2)).
     """
     N, _ = _tree_shape(n, leaf)
-    persistent = 3 * N * itemsize
+    persistent = batch * 3 * N * itemsize
     dense_tile = N * min(stream_threshold, N)
-    transient = (max(chunk * 2 * N, dense_tile) + N * leaf) * itemsize
+    transient = batch * (max(chunk * 2 * N, dense_tile) + N * leaf) * itemsize
     return {
         "persistent_bytes": persistent,
         "transient_bytes": transient,
         "total_bytes": persistent + transient,
-        "model": f"3N + (max(2*chunk, min(T,N)) + leaf)*N floats, N={N}",
+        "model": f"B*(3N + (max(2*chunk, min(T,N)) + leaf)*N) floats, "
+                 f"N={N}, B={batch}",
     }

@@ -1,0 +1,75 @@
+"""Lightweight instrumentation counters for the solver core.
+
+The solver counts *device solves* (executor launches), not problems: a
+batched solve of 256 tridiagonals is ONE launch.  Regression tests pin
+invariants like "padded ``return_boundary`` costs exactly one solve" and
+"SLQ performs one device solve for any number of probes" against these
+counters, so they must be cheap, thread-safe, and easy to scope to a
+code region without races between tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+
+class CounterWindow:
+    """A read-only view of a :class:`SolveCounter` since a start mark."""
+
+    def __init__(self, counter: "SolveCounter", start: int):
+        self._counter = counter
+        self._start = start
+
+    @property
+    def count(self) -> int:
+        """Increments observed since the window opened."""
+        return self._counter.count - self._start
+
+
+class SolveCounter:
+    """Thread-safe monotonic event counter with scoped measurement.
+
+    Usage (the regression-test idiom)::
+
+        with SOLVE_COUNTER.measure() as window:
+            eigvalsh_tridiagonal_br(d, e, return_boundary=True)
+        assert window.count == 1
+
+    ``measure()`` never mutates the global tally (it is a read-only view
+    from a start mark), so opening a window cannot corrupt another
+    window's baseline the way a ``reset()``-based idiom would.  Note the
+    counter itself is process-global: a window observes increments from
+    ALL threads, so exact-count assertions belong in code that owns the
+    counter for the measured region (the test suite runs solves
+    sequentially).  ``reset()`` exists for callers that want a hard zero.
+    """
+
+    def __init__(self, name: str = "solves"):
+        self.name = name
+        self._lock = threading.Lock()
+        self._count = 0
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    def increment(self, n: int = 1) -> None:
+        with self._lock:
+            self._count += n
+
+    def reset(self) -> None:
+        with self._lock:
+            self._count = 0
+
+    @contextlib.contextmanager
+    def measure(self):
+        """Context manager yielding a window counting from entry."""
+        yield CounterWindow(self, self.count)
+
+    def __int__(self) -> int:
+        return self.count
+
+    def __repr__(self) -> str:
+        return f"SolveCounter({self.name}={self.count})"

@@ -24,7 +24,6 @@ The same `merge_node` serves three algorithms (DESIGN.md section 2):
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -130,38 +129,15 @@ def default_stream_threshold() -> int:
         else DEFAULT_STREAM_THRESHOLD_ACCEL
 
 
-def merge_node(dL, dR, zL, zR, R, rho, sgn, *,
-               niter: int = 16, chunk: int = 256, use_zhat: bool = True,
-               root_mode: bool = False, tol_factor: float = 8.0,
-               stream_threshold: int | None = None,
-               fused: bool = True) -> MergeResult:
-    """Merge one pair of solved children.  See module docstring.
+def _merge_prepare(dL, dR, zL, zR, R, rho, sgn, tol_factor):
+    """Per-node merge head: z assembly, pole sort, deflation, compaction.
 
-    Args:
-      dL, dR: (M,) ascending child eigenvalues.
-      zL: (M,) bhi(Q_L) -- last row of the left child's eigenvector matrix.
-      zR: (M,) blo(Q_R) -- first row of the right child's.
-      R:  (r, K=2M) selected child rows, columns aligned to [L cols, R cols].
-      rho: scalar >= 0, |e| at the split.
-      sgn: +-1.0, sign of the split off-diagonal (absorbed into z, Eq. 3).
-      root_mode: skip all row propagation (paper's root-only mode).
-      stream_threshold: size-adaptive dispatch -- merges with K at or below
-        it run the dense vectorized secular paths (one (K, K) tile, no
-        streaming loop; stays parallel under the level vmap where K is
-        small and the batch is large), larger merges stream in O(chunk * K)
-        tiles.  None: backend-aware default (see default_stream_threshold).
-      fused: single fused delta pass for the post-solve phase (zhat + row
-        update share each tile); False keeps the legacy two-pass form for
-        benchmarking/regression.
+    Everything up to (but excluding) the secular solve -- the part that is
+    inherently per-node (the close-pole Givens chain is a sequential scan
+    over this node's poles).  Returns (d, z, R, kprime, rho_eff) with the
+    active poles sorted ascending in the prefix.
     """
     K = dL.shape[0] + dR.shape[0]
-    if stream_threshold is None:
-        stream_threshold = default_stream_threshold()
-    # fused=False reproduces the pre-fusion pipeline exactly (always
-    # streamed, two post-passes) as the benchmark baseline.
-    dense = fused and K <= stream_threshold
-    dtype = dL.dtype
-
     d0 = jnp.concatenate([dL, dR])
     z0 = jnp.concatenate([zL, sgn * zR])
     nrm2 = jnp.sum(z0 * z0)
@@ -192,44 +168,120 @@ def merge_node(dL, dR, zL, zR, R, rho, sgn, *,
     R = R[:, p2]
     deflated = deflated[p2]
     kprime = (K - jnp.sum(deflated)).astype(jnp.int32)
+    return d, z, R, kprime, rho_eff
 
-    # ---- secular root solve (compact delta representation) --------------
-    origin, tau = _ops.secular_solve(d, z * z, rho_eff, kprime,
-                                     niter=niter, chunk=chunk, dense=dense)
-    lam = d[origin] + tau
+
+def merge_level(lam_pairs, z_inner, R, rho, sgn, *,
+                niter: int = 16, chunk: int = 256, use_zhat: bool = True,
+                root_mode: bool = False, tol_factor: float = 8.0,
+                stream_threshold: int | None = None,
+                fused: bool = True) -> MergeResult:
+    """One tree level of merges: all nodes solved as ONE batched sweep.
+
+    lam_pairs: (W, 2, M) child spectra; z_inner: (W, 2, M) = (bhi_L, blo_R);
+    R: (W, r, 2M); rho, sgn: (W,).  The leading axis is "independent
+    merges" -- in the batch-first driver it is the flattened
+    ``problems x nodes`` product, so a whole problem batch shares one
+    level launch.
+
+    Execution shape: the per-node head (deflation chain) runs vmapped,
+    then the secular root solve and the fused post-pass run through the
+    *batched* kernel dispatchers (`ops.secular_solve_batched` /
+    `ops.secular_postpass_batched`) -- one launch for the whole level on
+    the Pallas backend (problem-indexed grid axis), a W-wide vectorized
+    sweep on XLA.
+
+    Args:
+      root_mode: skip all row propagation (paper's root-only mode).
+      stream_threshold: size-adaptive dispatch -- levels with K at or below
+        it run the dense vectorized secular paths (one (W, K, K) tile, no
+        streaming loop), larger merges stream in O(chunk * K) tiles per
+        node.  None: backend-aware default (see default_stream_threshold).
+      fused: single fused delta pass for the post-solve phase (zhat + row
+        update share each tile); False keeps the legacy two-pass form for
+        benchmarking/regression.
+    """
+    K = 2 * lam_pairs.shape[-1]
+    if stream_threshold is None:
+        stream_threshold = default_stream_threshold()
+    # fused=False reproduces the pre-fusion pipeline exactly (always
+    # streamed, two post-passes) as the benchmark baseline.
+    dense = fused and K <= stream_threshold
+    dtype = lam_pairs.dtype
+
+    d, z, Rp, kprime, rho_eff = jax.vmap(
+        lambda lp, zi, r_, rh, sg: _merge_prepare(
+            lp[0], lp[1], zi[0], zi[1], r_, rh, sg, tol_factor)
+    )(lam_pairs, z_inner, R, rho, sgn)
+
+    # ---- secular root solve (compact delta representation, batched) -----
+    origin, tau = _ops.secular_solve_batched(
+        d, z * z, rho_eff, kprime, niter=niter, chunk=chunk, dense=dense)
+    lam = jnp.take_along_axis(d, origin, axis=1) + tau
 
     # ---- selected-row propagation (skipped at the root) ------------------
     if root_mode:
-        rows = jnp.zeros_like(R)
+        rows = jnp.zeros_like(Rp)
     elif fused:
         # One pass over the delta structure for both zhat and the rows.
-        _, rows = _ops.secular_postpass(R, d, z, origin, tau, kprime,
-                                        rho_eff, use_zhat=use_zhat,
-                                        chunk=chunk, dense=dense)
+        _, rows = _ops.secular_postpass_batched(
+            Rp, d, z, origin, tau, kprime, rho_eff,
+            use_zhat=use_zhat, chunk=chunk, dense=dense)
     else:
-        # Legacy two-pass conquer (streams the delta structure twice).
-        zr = z
-        if use_zhat:
-            zr = _sec.zhat_reconstruct(d, z, origin, tau, kprime, rho_eff,
-                                       chunk=chunk)
-        rows = _sec.boundary_rows_update(R, d, zr, origin, tau, kprime,
-                                         chunk=chunk)
+        # Legacy two-pass conquer (streams the delta structure twice,
+        # per node -- the benchmark baseline path).
+        def two_pass(R_, d_, z_, origin_, tau_, kprime_, rho_):
+            zr = z_
+            if use_zhat:
+                zr = _sec.zhat_reconstruct(d_, z_, origin_, tau_, kprime_,
+                                           rho_, chunk=chunk)
+            return _sec.boundary_rows_update(R_, d_, zr, origin_, tau_,
+                                             kprime_, chunk=chunk)
+        rows = jax.vmap(two_pass)(Rp, d, z, origin, tau, kprime, rho_eff)
 
-    # ---- final ascending sort of the parent spectrum ---------------------
-    p3 = jnp.argsort(lam)
-    lam = lam[p3]
-    rows = rows[:, p3] if not root_mode else rows
+    # ---- final ascending sort of the parent spectra ----------------------
+    p3 = jnp.argsort(lam, axis=1)
+    lam = jnp.take_along_axis(lam, p3, axis=1)
+    if not root_mode:
+        rows = jnp.take_along_axis(rows, p3[:, None, :], axis=2)
 
     return MergeResult(lam.astype(dtype), rows, kprime, rho_eff)
 
 
-def merge_level(lam_pairs, z_inner, R, rho, sgn, **kw):
-    """vmapped merge across all independent nodes of one tree level.
+def merge_node(dL, dR, zL, zR, R, rho, sgn, **kw) -> MergeResult:
+    """Merge one pair of solved children (single-node view of merge_level).
 
-    lam_pairs: (B, 2, M) child spectra; z_inner: (B, 2, M) = (bhi_L, blo_R);
-    R: (B, r, 2M); rho, sgn: (B,).
+    dL, dR: (M,) ascending child eigenvalues; zL/zR the inner boundary
+    rows; R (r, 2M) selected rows; rho scalar >= 0; sgn +-1.  Keyword
+    knobs as in :func:`merge_level`.
     """
-    fn = functools.partial(merge_node, **kw)
-    return jax.vmap(
-        lambda lp, zi, r_, rh, sg: fn(lp[0], lp[1], zi[0], zi[1], r_, rh, sg)
-    )(lam_pairs, z_inner, R, rho, sgn)
+    res = merge_level(
+        jnp.stack([dL, dR])[None], jnp.stack([zL, zR])[None], R[None],
+        jnp.asarray(rho)[None], jnp.asarray(sgn)[None], **kw)
+    return MergeResult(res.lam[0], res.rows[0], res.kprime[0],
+                       res.rho_eff[0])
+
+
+def merge_level_batched(lam_pairs, z_inner, R, rho, sgn, **kw):
+    """Problem-batched level merge: one launch for B problems x nm nodes.
+
+    lam_pairs: (B, nm, 2, M); z_inner: (B, nm, 2, M); R: (B, nm, r, 2M);
+    rho, sgn: (B, nm).  The problem axis is absorbed into the node axis --
+    merges of *different* problems at the same depth are exactly as
+    independent as merges of the same problem, so the flattened
+    (B * nm)-wide vmap is the native batched execution (no outer vmap, no
+    per-problem dispatch).  Results are reshaped back to (B, nm, ...).
+    """
+    B, nm, _, M = lam_pairs.shape
+    r = R.shape[2]
+    res = merge_level(
+        lam_pairs.reshape(B * nm, 2, M),
+        z_inner.reshape(B * nm, 2, M),
+        R.reshape(B * nm, r, 2 * M),
+        rho.reshape(B * nm), sgn.reshape(B * nm), **kw)
+    K = res.lam.shape[-1]
+    return MergeResult(
+        res.lam.reshape(B, nm, K),
+        res.rows.reshape(B, nm, r, K),
+        res.kprime.reshape(B, nm),
+        res.rho_eff.reshape(B, nm))

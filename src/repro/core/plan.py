@@ -1,0 +1,296 @@
+"""Batch-first solve plans: static tree shape + bucketed compile cache.
+
+Every solve -- single or batched -- goes through a :class:`SolvePlan`.
+A plan captures everything *static* about a solve up front:
+
+  * the padded problem size ``N = leaf * 2^L`` and tree depth ``L``,
+  * the per-level rank-one coupling indices (where each merge's split
+    off-diagonal lives in ``e``),
+  * the selected-row track slots (2 boundary rows, +1 tracked original
+    row when boundary output is requested),
+  * the batch bucket: request batches are rounded **up to the next power
+    of two**, so arbitrary traffic (B = 1, 3, 5, 97, ...) lands on a
+    handful of compiled executables instead of one trace per batch size.
+
+and owns the process-wide cache of compiled executables, keyed on
+
+    (padded N, leaf, batch bucket, dtype, chunk, niter, use_zhat,
+     return_boundary, tol_factor, stream_threshold, fused)
+
+Two requests that differ only in original size n (same padded bucket) or
+only in batch size (same power-of-two bucket) share one executable: the
+tracked-row index is a *traced* per-problem input and short batches are
+padded with trivial dummy problems, both sliced away on exit.  This is
+what lets the solver run as a service under real traffic -- steady-state
+request handling is cache lookups + one device launch, never a retrace.
+
+``stream_threshold=None`` is resolved to the backend-aware concrete value
+at plan-construction time so the cache key is always fully concrete.
+
+Memory model: persistent state for a bucket of B problems is B * O(N)
+(lam + selected rows + inputs), never B * O(N^2) -- the paper's O(n)
+boundary-row state is exactly what makes the batched front door viable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.core import br_dc as _br
+from repro.core import merge as _merge
+from repro.core.instrument import SolveCounter
+
+# Incremented once per executor *trace* (Python-level side effect inside
+# the jitted body runs only when XLA actually retraces).  Tests assert
+# that a second same-bucket request performs zero new traces.
+EXECUTOR_TRACES = SolveCounter("executor_traces")
+
+
+class PlanKey(NamedTuple):
+    """Bucketed compile-cache key; every field is static/hashable."""
+    padded_n: int
+    leaf: int
+    batch_bucket: int
+    dtype: str
+    chunk: int
+    niter: int
+    use_zhat: bool
+    return_boundary: bool
+    tol_factor: float
+    stream_threshold: int
+    fused: bool
+
+
+def batch_bucket(batch: int) -> int:
+    """Round a request batch up to the next power of two (min 1)."""
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    return 1 << (batch - 1).bit_length()
+
+
+# Elements per streamed secular tile the CPU path aims for (~2 MiB f64):
+# big enough to amortize loop steps, small enough to stay cache-resident.
+_CPU_TILE_BUDGET = 256 * 1024
+
+
+def _resolve_chunk(chunk: int, bucket: int, padded_n: int) -> int:
+    """Batch-aware effective streaming chunk (CPU only).
+
+    The requested ``chunk`` is an upper bound.  Under a wide batch the
+    vmapped streamed tiles are (bucket * nodes, chunk, K): a chunk sized
+    for one problem blows the cache by the batch factor and the secular
+    iteration turns memory-bound (measured ~4x slower per problem at
+    bucket=64, K=256 with chunk=256 vs 16 on 2-core CPU).  The effective
+    chunk targets a fixed tile budget at the top merge (K = padded N,
+    width = bucket), keeping per-eval tiles cache-resident; results are
+    equivalent to rounding (chunking is a pure scheduling knob).
+    Accelerator backends keep the requested chunk -- their kernels tile
+    explicitly.
+    """
+    if bucket <= 1 or jax.default_backend() != "cpu":
+        return chunk
+    return max(8, min(chunk, _CPU_TILE_BUDGET // (bucket * padded_n)))
+
+
+_MESH_LOCK = threading.Lock()
+_MESH_CACHE: dict[int, Mesh] = {}
+
+
+def _batch_sharding(bucket: int):
+    """NamedSharding over the batch axis when multiple devices exist.
+
+    A batched solve is embarrassingly parallel across problems, so the
+    bucket is split across all default-backend devices (forced host CPU
+    devices count too: set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<cores>`` to give
+    the executor one device per core).  The Python loop of single solves
+    can never use this -- each of its launches is one problem wide.
+    Buckets are powers of two, so the mesh uses the largest power-of-two
+    device count available (a 6-core host shards over 4 devices rather
+    than not at all).  Returns None when sharding does not apply
+    (single device, or bucket smaller than two shards).
+    """
+    devs = jax.devices()
+    if len(devs) <= 1:
+        return None
+    n = 1 << (len(devs).bit_length() - 1)   # largest pow2 <= len(devs)
+    n = min(n, bucket)                      # bucket is pow2 -> divisible
+    if n <= 1:
+        return None
+    with _MESH_LOCK:
+        mesh = _MESH_CACHE.get(n)
+        if mesh is None:
+            mesh = Mesh(np.array(devs[:n]), ("batch",))
+            _MESH_CACHE[n] = mesh
+    return NamedSharding(mesh, PartitionSpec("batch"))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "leaf", "chunk", "niter", "use_zhat", "return_boundary", "tol_factor",
+    "stream_threshold", "fused"))
+def _executor(d_pad, e_pad, track, *, leaf, chunk, niter, use_zhat,
+              return_boundary, tol_factor, stream_threshold, fused):
+    """The one compiled entry point for every solve.
+
+    A module-level jit (not per-plan) so the executable cache is shared by
+    all SolvePlan instances: same bucket shapes + same static flags ==
+    same executable, even across plan objects and original sizes n.
+    """
+    EXECUTOR_TRACES.increment()
+    return _br._br_dc_padded_batch(
+        d_pad, e_pad, track, leaf=leaf, chunk=chunk, niter=niter,
+        use_zhat=use_zhat, return_boundary=return_boundary,
+        tol_factor=tol_factor, stream_threshold=stream_threshold,
+        fused=fused)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolvePlan:
+    """Static solve schedule for one (padded N, batch bucket) class."""
+    key: PlanKey
+    levels: int
+    # Per-level tuples of the original indices k whose off-diagonal
+    # e[k-1] couples each merge at that level (diagnostics/scheduling).
+    coupling_index: tuple
+    # Selected-row slots: ("blo", "bhi") (+ "track" with boundary output).
+    track_slots: tuple
+
+    @property
+    def padded_n(self) -> int:
+        return self.key.padded_n
+
+    @property
+    def batch_bucket_size(self) -> int:
+        return self.key.batch_bucket
+
+    def execute(self, d, e) -> "_br.BRBatchResult":
+        """Run the plan's cached executor on a (B, n) problem batch.
+
+        B may be anything <= the plan's batch bucket (short batches are
+        padded with dummy problems and sliced away); n may be anything
+        that pads to this plan's N.  Exactly one device launch.
+        """
+        key = self.key
+        dtype = jnp.dtype(key.dtype)
+        d = jnp.asarray(d, dtype)
+        e = jnp.asarray(e, dtype)
+        d, e = _br._as_batch(d, e, None)   # enforce (B, n)/(B, n-1)
+        B, n = d.shape
+        Bb = key.batch_bucket
+        if B > Bb:
+            raise ValueError(
+                f"batch {B} exceeds plan bucket {Bb}; make a bigger plan")
+        if _br._tree_shape(n, key.leaf)[0] != key.padded_n:
+            raise ValueError(
+                f"n={n} pads to {_br._tree_shape(n, key.leaf)[0]}, but this "
+                f"plan was built for padded N={key.padded_n}")
+
+        if B < Bb:
+            # Dummy problems: zero diagonals decouple exactly and cost one
+            # deflated pass-through per merge; sliced off below.
+            d = jnp.concatenate([d, jnp.zeros((Bb - B, n), dtype)], axis=0)
+            e = jnp.concatenate(
+                [e, jnp.zeros((Bb - B, max(n - 1, 0)), dtype)], axis=0)
+
+        d_pad, e_pad, N, L = _br._pad_problem(d, e, key.leaf)
+        # The tracked third row slot is only needed when padding appends
+        # sentinel rows below row n-1; unpadded problems (n == N) already
+        # carry that row as the bhi slot, so they run with r == 2.
+        track = (jnp.full((Bb,), n - 1, jnp.int32)
+                 if key.return_boundary and n != N else None)
+
+        sharding = _batch_sharding(Bb)
+        if sharding is not None:
+            d_pad = jax.device_put(d_pad, sharding)
+            e_pad = jax.device_put(e_pad, sharding)
+            if track is not None:
+                track = jax.device_put(track, sharding)
+
+        lam, rows, kprimes = _executor(
+            d_pad, e_pad, track, leaf=key.leaf, chunk=key.chunk,
+            niter=key.niter, use_zhat=key.use_zhat,
+            return_boundary=key.return_boundary, tol_factor=key.tol_factor,
+            stream_threshold=key.stream_threshold, fused=key.fused)
+        _br.SOLVE_COUNTER.increment()
+
+        lam = lam[:B, :n]  # sentinels sort above the Gershgorin bound
+        if key.return_boundary:
+            blo = rows[:B, 0, :n]
+            bhi = rows[:B, 2 if track is not None else 1, :n]
+        else:
+            blo = bhi = None
+        return _br.BRBatchResult(lam, blo, bhi,
+                                 tuple(k[:B] for k in kprimes))
+
+
+_PLAN_CACHE: dict[PlanKey, SolvePlan] = {}
+_PLAN_LOCK = threading.Lock()
+_STATS = {"hits": 0, "misses": 0}
+
+
+def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
+              niter: int = 16, use_zhat: bool = True,
+              return_boundary: bool = False, tol_factor: float = 8.0,
+              stream_threshold: int | None = None, fused: bool = True,
+              dtype=None) -> SolvePlan:
+    """Build (or fetch) the SolvePlan for an (n, batch) request class.
+
+    Bucketing: ``batch`` rounds up to the next power of two and ``n`` is
+    absorbed into its padded ``leaf * 2^L`` size, so the cache stays a
+    handful of entries under arbitrary traffic.  The returned plan is
+    shared and immutable; ``plan.execute(d, e)`` is the only entry point
+    that launches work.
+    """
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    if dtype is None:
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    if stream_threshold is None:
+        stream_threshold = _merge.default_stream_threshold()
+    bucket = batch_bucket(batch)
+    N, L = _br._tree_shape(n, leaf)
+    chunk = _resolve_chunk(chunk, bucket, N)
+    key = PlanKey(padded_n=N, leaf=leaf, batch_bucket=bucket,
+                  dtype=jnp.dtype(dtype).name, chunk=chunk, niter=niter,
+                  use_zhat=use_zhat, return_boundary=return_boundary,
+                  tol_factor=float(tol_factor),
+                  stream_threshold=int(stream_threshold), fused=fused)
+    with _PLAN_LOCK:
+        plan = _PLAN_CACHE.get(key)
+        if plan is not None:
+            _STATS["hits"] += 1
+            return plan
+        _STATS["misses"] += 1
+        coupling = []
+        for level in range(L):
+            M = leaf * (1 << level)
+            nm = N // (2 * M)
+            coupling.append(tuple((2 * i + 1) * M for i in range(nm)))
+        slots = ("blo", "bhi") + (("track",) if return_boundary else ())
+        plan = SolvePlan(key=key, levels=L, coupling_index=tuple(coupling),
+                         track_slots=slots)
+        _PLAN_CACHE[key] = plan
+        return plan
+
+
+def plan_cache_stats() -> dict:
+    """Plan-cache observability: size/hits/misses + executor trace count."""
+    with _PLAN_LOCK:
+        return {"size": len(_PLAN_CACHE), "hits": _STATS["hits"],
+                "misses": _STATS["misses"],
+                "executor_traces": EXECUTOR_TRACES.count}
+
+
+def clear_plan_cache() -> None:
+    """Drop cached plans (compiled executables stay in jax's jit cache)."""
+    with _PLAN_LOCK:
+        _PLAN_CACHE.clear()
+        _STATS["hits"] = _STATS["misses"] = 0

@@ -220,6 +220,34 @@ def secular_solve(d, z2, rho, kprime, *, niter: int = 40, chunk: int = 128,
     return origin.reshape(-1)[:K], tau.reshape(-1)[:K]
 
 
+def secular_solve_batched(d, z2, rho, kprime, *, niter: int = 40,
+                          chunk: int = 128, dense: bool = False):
+    """Problem-batched secular solve: one launch for B independent merges.
+
+    d, z2: (B, K); rho, kprime: (B,).  The chunked single-problem path is
+    rank-polymorphic under vmap (``lax.map``/``fori_loop`` batch their
+    bodies), so the batched form is the same streamed kernel with every
+    chunk evaluation B-wide -- per-problem results are bit-identical to
+    the unbatched call.  Returns (origin (B, K) int32, tau (B, K)).
+    """
+    fn = functools.partial(secular_solve, niter=niter, chunk=chunk,
+                           dense=dense)
+    return jax.vmap(fn)(d, z2, rho, kprime)
+
+
+def secular_postpass_batched(R, d, z, origin, tau, kprime, rho, *,
+                             use_zhat: bool = True, chunk: int = 128,
+                             dense: bool = False):
+    """Problem-batched fused post-pass (see :func:`secular_postpass`).
+
+    R: (B, r, K); d, z, origin, tau: (B, K); kprime, rho: (B,).
+    Returns (zhat (B, K), rows (B, r, K)).
+    """
+    fn = functools.partial(secular_postpass, use_zhat=use_zhat, chunk=chunk,
+                           dense=dense)
+    return jax.vmap(fn)(R, d, z, origin, tau, kprime, rho)
+
+
 def secular_eigenvalues(d, origin, tau):
     """Materialize eigenvalues from compact delta representation."""
     return d[origin] + tau

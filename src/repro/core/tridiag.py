@@ -87,4 +87,18 @@ def make_family(family: str, n: int, dtype=np.float64, seed: int | None = None):
     return d.astype(dtype), e.astype(dtype)
 
 
+def make_family_batch(family: str, n: int, batch: int, dtype=np.float64,
+                      seed0: int = 0):
+    """Stacked (B, n)/(B, n-1) batch of one family, seeds seed0..seed0+B-1.
+
+    The input layout ``eigvalsh_tridiagonal_batch`` consumes; shared by
+    benchmarks, examples and tests so the seeding convention lives in
+    one place.
+    """
+    problems = [make_family(family, n, dtype=dtype, seed=seed0 + s)
+                for s in range(batch)]
+    return (np.stack([d for d, _ in problems]),
+            np.stack([e for _, e in problems]))
+
+
 FAMILIES = ("uniform", "normal", "toeplitz", "clustered", "wilkinson")

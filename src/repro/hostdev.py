@@ -1,0 +1,42 @@
+"""Pre-jax-import host-device setup (jax-free on purpose).
+
+Forcing XLA host CPU devices lets the batched plan executor shard
+problem batches across cores (`repro.core.plan._batch_sharding`).  The
+flag only takes effect if it is set BEFORE the first ``import jax``
+anywhere in the process, so this module must not import jax and callers
+(benchmark driver, examples) must invoke it before their jax imports.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+import sys
+
+
+def force_host_devices(n: int | None = None) -> int:
+    """Set ``--xla_force_host_platform_device_count=n`` in XLA_FLAGS.
+
+    n defaults to ``os.cpu_count()``; n <= 1 leaves the environment
+    untouched.  If XLA_FLAGS already configures the flag, the existing
+    setting wins (we never rewrite user flags) -- but an explicitly
+    requested count that differs gets a stderr warning instead of a
+    silent no-op.  Returns the count now in effect via this call
+    (0 when nothing was changed).
+    """
+    explicit = n is not None
+    if n is None:
+        n = os.cpu_count() or 1
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        if explicit:
+            print(f"[hostdev] XLA_FLAGS already configures host devices; "
+                  f"requested count {n} ignored ({flags!r})",
+                  file=sys.stderr)
+        return 0
+    if n <= 1:
+        return 0
+    os.environ["XLA_FLAGS"] = \
+        (flags + f" --xla_force_host_platform_device_count={n}").strip()
+    return n

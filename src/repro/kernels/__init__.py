@@ -18,18 +18,24 @@ from repro.kernels.ops import (
     boundary_rows_update,
     resolve_backend,
     secular_postpass,
+    secular_postpass_batched,
     secular_solve,
+    secular_solve_batched,
     set_backend,
     zhat_reconstruct,
 )
-from repro.kernels.secular_roots import secular_solve_pallas
+from repro.kernels.secular_roots import (secular_solve_pallas,
+                                         secular_solve_pallas_batch)
 from repro.kernels.boundary_update import boundary_rows_update_pallas
-from repro.kernels.fused_update import secular_postpass_pallas
+from repro.kernels.fused_update import (secular_postpass_pallas,
+                                        secular_postpass_pallas_batch)
 from repro.kernels.zhat import zhat_reconstruct_pallas
 
 __all__ = [
     "boundary_rows_update", "boundary_rows_update_pallas", "resolve_backend",
-    "secular_postpass", "secular_postpass_pallas",
-    "secular_solve", "secular_solve_pallas", "set_backend",
+    "secular_postpass", "secular_postpass_batched", "secular_postpass_pallas",
+    "secular_postpass_pallas_batch",
+    "secular_solve", "secular_solve_batched", "secular_solve_pallas",
+    "secular_solve_pallas_batch", "set_backend",
     "zhat_reconstruct", "zhat_reconstruct_pallas",
 ]

@@ -45,22 +45,46 @@ def _root_tile_for(Kp: int, root_tile: int) -> int:
 
 def _fused_kernel(R_ref, d_ref, z_ref, dorg_ref, tau_ref, rho_ref,
                   kprime_ref, zhat_ref, cols_ref, nrm2_ref, *,
-                  root_tile, use_zhat):
-    r, Kp = R_ref.shape
-    C = zhat_ref.shape[0]
+                  root_tile, use_zhat, batched=False):
+    # ``batched``: refs carry a leading length-1 problem-block dim and the
+    # grid is (B, pole_blocks); the grid iterates problems in the major
+    # axis, so each problem's accumulator init (first pole block) and
+    # normalization (last pole block) stay correctly sequenced.
+    r, Kp = R_ref.shape[-2:]
+    C = zhat_ref.shape[-1]
     T = _root_tile_for(Kp, root_tile)
     num_tiles = Kp // T
     dtype = d_ref.dtype
 
-    d = d_ref[...]
-    z = z_ref[...]
-    d_org = dorg_ref[...]
-    tau = tau_ref[...]
-    rho = rho_ref[0]
-    kprime = kprime_ref[0]
+    if batched:
+        d = d_ref[0]
+        z = z_ref[0]
+        d_org = dorg_ref[0]
+        tau = tau_ref[0]
+        rho = rho_ref[0, 0]
+        kprime = kprime_ref[0, 0]
+        i = pl.program_id(1)
+        num_blocks = pl.num_programs(1)
+        read_cols = lambda: cols_ref[0]
+        write_cols = lambda v: cols_ref.__setitem__(0, v)
+        read_nrm2 = lambda: nrm2_ref[0]
+        write_nrm2 = lambda v: nrm2_ref.__setitem__(0, v)
+        R_full = R_ref[0]
+    else:
+        d = d_ref[...]
+        z = z_ref[...]
+        d_org = dorg_ref[...]
+        tau = tau_ref[...]
+        rho = rho_ref[0]
+        kprime = kprime_ref[0]
+        i = pl.program_id(0)
+        num_blocks = pl.num_programs(0)
+        read_cols = lambda: cols_ref[...]
+        write_cols = lambda v: cols_ref.__setitem__(..., v)
+        read_nrm2 = lambda: nrm2_ref[...]
+        write_nrm2 = lambda v: nrm2_ref.__setitem__(..., v)
+        R_full = R_ref[...]
 
-    i = pl.program_id(0)
-    num_blocks = pl.num_programs(0)
     ic = i * C + jax.lax.iota(jnp.int32, C)
     valid_i = ic < kprime            # active, non-padded poles only
     d_i = d[ic]
@@ -68,8 +92,8 @@ def _fused_kernel(R_ref, d_ref, z_ref, dorg_ref, tau_ref, rho_ref,
 
     @pl.when(i == 0)
     def _init():
-        cols_ref[...] = jnp.zeros((r, Kp), dtype)
-        nrm2_ref[...] = jnp.zeros((Kp,), dtype)
+        write_cols(jnp.zeros((r, Kp), dtype))
+        write_nrm2(jnp.zeros((Kp,), dtype))
 
     # ---- phase 1: zhat for this pole block (row reduction over roots) ---
     # DLAED3 ratio-product form: numerator/denominator factors pair up as
@@ -99,13 +123,16 @@ def _fused_kernel(R_ref, d_ref, z_ref, dorg_ref, tau_ref, rho_ref,
         zhat_c = jnp.where(valid_i, zhat_c, z_i).astype(dtype)
     else:
         zhat_c = z_i
-    zhat_ref[...] = zhat_c
+    if batched:
+        zhat_ref[0, :] = zhat_c
+    else:
+        zhat_ref[...] = zhat_c
     w = jnp.where(valid_i, zhat_c, 0.0)
 
     # ---- phase 2: this block's contribution to every root column --------
     # zhat is still in VMEM; no HBM round-trip between the phases.
     Rc = jax.lax.dynamic_slice(
-        R_ref[...], (jnp.zeros((), jnp.int32), jnp.asarray(i * C, jnp.int32)),
+        R_full, (jnp.zeros((), jnp.int32), jnp.asarray(i * C, jnp.int32)),
         (r, C))
 
     def tile2(t, _):
@@ -119,22 +146,22 @@ def _fused_kernel(R_ref, d_ref, z_ref, dorg_ref, tau_ref, rho_ref,
             Rc, y, (((1,), (0,)), ((), ())),
             preferred_element_type=dtype)                        # (r, T)
         prev = jax.lax.dynamic_slice(
-            cols_ref[...], (jnp.zeros((), jnp.int32), start), (r, T))
-        cols_ref[...] = jax.lax.dynamic_update_slice(
-            cols_ref[...], prev + contrib,
-            (jnp.zeros((), jnp.int32), start))
-        prevn = jax.lax.dynamic_slice(nrm2_ref[...], (start,), (T,))
-        nrm2_ref[...] = jax.lax.dynamic_update_slice(
-            nrm2_ref[...], prevn + jnp.sum(y * y, axis=0), (start,))
+            read_cols(), (jnp.zeros((), jnp.int32), start), (r, T))
+        write_cols(jax.lax.dynamic_update_slice(
+            read_cols(), prev + contrib,
+            (jnp.zeros((), jnp.int32), start)))
+        prevn = jax.lax.dynamic_slice(read_nrm2(), (start,), (T,))
+        write_nrm2(jax.lax.dynamic_update_slice(
+            read_nrm2(), prevn + jnp.sum(y * y, axis=0), (start,)))
         return 0
 
     jax.lax.fori_loop(0, num_tiles, tile2, 0)
 
-    # Final grid step: apply the column normalization in-place.
+    # Final grid step for this problem: apply the normalization in-place.
     @pl.when(i == num_blocks - 1)
     def _finalize():
-        nrm = jnp.sqrt(nrm2_ref[...])
-        cols_ref[...] = cols_ref[...] / jnp.where(nrm > 0.0, nrm, 1.0)[None, :]
+        nrm = jnp.sqrt(read_nrm2())
+        write_cols(read_cols() / jnp.where(nrm > 0.0, nrm, 1.0)[None, :])
 
 
 @functools.partial(jax.jit, static_argnames=("use_zhat", "pole_block",
@@ -199,4 +226,74 @@ def secular_postpass_pallas(R, d, z, origin, tau, kprime, rho, *,
     active = jnp.arange(K) < kprime
     zhat = jnp.where(active, zhat[:K], z).astype(d.dtype)
     rows = jnp.where(active[None, :], cols[:, :K], R).astype(R.dtype)
+    return zhat, rows
+
+
+@functools.partial(jax.jit, static_argnames=("use_zhat", "pole_block",
+                                             "root_tile", "interpret"))
+def secular_postpass_pallas_batch(R, d, z, origin, tau, kprime, rho, *,
+                                  use_zhat: bool = True,
+                                  pole_block: int = DEFAULT_POLE_BLOCK,
+                                  root_tile: int = DEFAULT_ROOT_TILE,
+                                  interpret: bool = False):
+    """Problem-batched fused post-pass: grid = (B, pole_blocks).
+
+    R: (B, r, K); d, z, origin, tau: (B, K); kprime, rho: (B,).  Problems
+    map to the major grid axis (their accumulator blocks are disjoint),
+    pole blocks to the minor axis -- a whole batched merge level's
+    post-pass is ONE kernel launch.  Per-problem math is identical to
+    :func:`secular_postpass_pallas`.
+
+    Returns (zhat (B, K), rows (B, r, K)).
+    """
+    B, r, K = R.shape
+    C = min(pole_block, K)
+    nblk = (K + C - 1) // C
+    grid = (B, nblk)
+    Kp = nblk * C
+
+    d_org = jnp.take_along_axis(d, jnp.minimum(origin, K - 1), axis=1)
+    if Kp != K:
+        pad = Kp - K
+        R_p = jnp.pad(R, ((0, 0), (0, 0), (0, pad)))
+        d_p = jnp.pad(d, ((0, 0), (0, pad)))
+        z_p = jnp.pad(z, ((0, 0), (0, pad)))
+        dorg_p = jnp.pad(d_org, ((0, 0), (0, pad)))
+        tau_p = jnp.pad(tau, ((0, 0), (0, pad)))
+    else:
+        R_p, d_p, z_p, dorg_p, tau_p = R, d, z, d_org, tau
+
+    rho_arr = jnp.asarray(rho, d.dtype).reshape(B, 1)
+    kp_arr = jnp.asarray(kprime, jnp.int32).reshape(B, 1)
+
+    kernel = functools.partial(_fused_kernel, root_tile=root_tile,
+                               use_zhat=use_zhat, batched=True)
+    zhat, cols, nrm2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, r, Kp), lambda b, i: (b, 0, 0)),  # R, resident
+            pl.BlockSpec((1, Kp), lambda b, i: (b, 0)),        # d
+            pl.BlockSpec((1, Kp), lambda b, i: (b, 0)),        # z
+            pl.BlockSpec((1, Kp), lambda b, i: (b, 0)),        # d[origin]
+            pl.BlockSpec((1, Kp), lambda b, i: (b, 0)),        # tau
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),         # rho
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),         # kprime
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C), lambda b, i: (b, i)),         # zhat
+            pl.BlockSpec((1, r, Kp), lambda b, i: (b, 0, 0)),  # cols acc
+            pl.BlockSpec((1, Kp), lambda b, i: (b, 0)),        # nrm2 acc
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Kp), d.dtype),
+            jax.ShapeDtypeStruct((B, r, Kp), R.dtype),
+            jax.ShapeDtypeStruct((B, Kp), d.dtype),
+        ],
+        interpret=interpret,
+    )(R_p, d_p, z_p, dorg_p, tau_p, rho_arr, kp_arr)
+
+    active = jnp.arange(K)[None, :] < kprime[:, None]
+    zhat = jnp.where(active, zhat[:, :K], z).astype(d.dtype)
+    rows = jnp.where(active[:, None, :], cols[:, :, :K], R).astype(R.dtype)
     return zhat, rows

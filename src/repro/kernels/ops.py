@@ -21,9 +21,11 @@ from __future__ import annotations
 import jax
 
 from repro.core import secular as _sec
-from repro.kernels.secular_roots import secular_solve_pallas
+from repro.kernels.secular_roots import (secular_solve_pallas,
+                                         secular_solve_pallas_batch)
 from repro.kernels.boundary_update import boundary_rows_update_pallas
-from repro.kernels.fused_update import secular_postpass_pallas
+from repro.kernels.fused_update import (secular_postpass_pallas,
+                                        secular_postpass_pallas_batch)
 from repro.kernels.zhat import zhat_reconstruct_pallas
 
 _BACKEND = "auto"
@@ -71,6 +73,47 @@ def secular_postpass(R, d, z, origin, tau, kprime, rho, *,
                                        interpret=_interpret())
     return _sec.secular_postpass(R, d, z, origin, tau, kprime, rho,
                                  use_zhat=use_zhat, chunk=chunk)
+
+
+def secular_solve_batched(d, z2, rho, kprime, *, niter: int = 16,
+                          chunk: int = 256, dense: bool = False,
+                          backend: str | None = None):
+    """Problem-batched secular solve: d, z2 (B, K); rho, kprime (B,).
+
+    Pallas backend maps problems onto a leading grid axis (one launch for
+    the whole batch); XLA runs the chunked path vmapped over problems.
+    Returns (origin (B, K) int32, tau (B, K)).
+    """
+    if dense:
+        return _sec.secular_solve_batched(d, z2, rho, kprime, niter=niter,
+                                          dense=True)
+    if resolve_backend(backend) == "pallas":
+        return secular_solve_pallas_batch(d, z2, rho, kprime, niter=niter,
+                                          root_block=chunk,
+                                          interpret=_interpret())
+    return _sec.secular_solve_batched(d, z2, rho, kprime, niter=niter,
+                                      chunk=chunk)
+
+
+def secular_postpass_batched(R, d, z, origin, tau, kprime, rho, *,
+                             use_zhat: bool = True, chunk: int = 256,
+                             dense: bool = False,
+                             backend: str | None = None):
+    """Problem-batched fused post-pass: R (B, r, K); kprime, rho (B,).
+
+    Returns (zhat (B, K), rows (B, r, K)); see ``secular_postpass``.
+    """
+    if dense:
+        return _sec.secular_postpass_batched(R, d, z, origin, tau, kprime,
+                                             rho, use_zhat=use_zhat,
+                                             dense=True)
+    if resolve_backend(backend) == "pallas":
+        return secular_postpass_pallas_batch(R, d, z, origin, tau, kprime,
+                                             rho, use_zhat=use_zhat,
+                                             pole_block=chunk,
+                                             interpret=_interpret())
+    return _sec.secular_postpass_batched(R, d, z, origin, tau, kprime, rho,
+                                         use_zhat=use_zhat, chunk=chunk)
 
 
 def boundary_rows_update(R, d, z, origin, tau, kprime, *, chunk: int = 256,

@@ -82,6 +82,25 @@ def secular_postpass_ref(R, d, z, origin, tau, kprime, rho, *,
     return zhat, rows
 
 
+def secular_roots_batch_ref(d, z2, rho, kprime, *, niter: int = 100):
+    """Batched bisection oracle: a literal Python loop of single-problem
+    oracles (the thing the batched kernels must match *and* beat)."""
+    outs = [secular_roots_ref(d[b], z2[b], rho[b], kprime[b], niter=niter)
+            for b in range(np.asarray(d).shape[0])]
+    return (jnp.stack([o[0] for o in outs]),
+            jnp.stack([o[1] for o in outs]))
+
+
+def secular_postpass_batch_ref(R, d, z, origin, tau, kprime, rho, *,
+                               use_zhat=True):
+    """Batched dense oracle: loop of single-problem dense post-passes."""
+    outs = [secular_postpass_ref(R[b], d[b], z[b], origin[b], tau[b],
+                                 kprime[b], rho[b], use_zhat=use_zhat)
+            for b in range(np.asarray(d).shape[0])]
+    return (jnp.stack([o[0] for o in outs]),
+            jnp.stack([o[1] for o in outs]))
+
+
 def zhat_reconstruct_ref(d, z, origin, tau, kprime, rho):
     """Dense pairwise log-product oracle."""
     K = d.shape[0]

@@ -36,19 +36,29 @@ DEFAULT_POLE_TILE = 1024
 
 
 def _secular_kernel(d_ref, z2_ref, rho_ref, kprime_ref,
-                    origin_ref, tau_ref, *, niter, pole_tile):
-    C = origin_ref.shape[0]
-    K = d_ref.shape[0]
+                    origin_ref, tau_ref, *, niter, pole_tile,
+                    batched=False):
+    # ``batched``: refs carry a leading length-1 problem-block dim and the
+    # grid is (B, root_blocks) -- one problem per grid row, so a whole
+    # batch of independent merges runs as a single kernel launch.
+    C = origin_ref.shape[-1]
+    K = d_ref.shape[-1]
     T = min(pole_tile, K)
     num_tiles = (K + T - 1) // T
     dtype = d_ref.dtype
 
-    d = d_ref[...]
-    z2 = z2_ref[...]
-    rho = rho_ref[0]
-    kprime = kprime_ref[0]
-
-    i = pl.program_id(0)
+    if batched:
+        d = d_ref[0]
+        z2 = z2_ref[0]
+        rho = rho_ref[0, 0]
+        kprime = kprime_ref[0, 0]
+        i = pl.program_id(1)
+    else:
+        d = d_ref[...]
+        z2 = z2_ref[...]
+        rho = rho_ref[0]
+        kprime = kprime_ref[0]
+        i = pl.program_id(0)
     jc = i * C + jax.lax.iota(jnp.int32, C)
     jc_safe = jnp.minimum(jc, K - 1)
     active_root = jc < kprime
@@ -175,8 +185,12 @@ def _secular_kernel(d_ref, z2_ref, rho_ref, kprime_ref,
     tau = jnp.where(active_root, tau, jnp.zeros_like(tau))
     origin = jnp.where(active_root, origin, jc_safe)
 
-    origin_ref[...] = origin.astype(jnp.int32)
-    tau_ref[...] = tau.astype(dtype)
+    if batched:
+        origin_ref[0, :] = origin.astype(jnp.int32)
+        tau_ref[0, :] = tau.astype(dtype)
+    else:
+        origin_ref[...] = origin.astype(jnp.int32)
+        tau_ref[...] = tau.astype(dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("niter", "root_block",
@@ -216,3 +230,52 @@ def secular_solve_pallas(d, z2, rho, kprime, *, niter: int = 16,
         interpret=interpret,
     )(d, z2, rho_arr, kp_arr)
     return origin[:K], tau[:K]
+
+
+@functools.partial(jax.jit, static_argnames=("niter", "root_block",
+                                             "pole_tile", "interpret"))
+def secular_solve_pallas_batch(d, z2, rho, kprime, *, niter: int = 16,
+                               root_block: int = DEFAULT_ROOT_BLOCK,
+                               pole_tile: int = DEFAULT_POLE_TILE,
+                               interpret: bool = False):
+    """Problem-batched Pallas secular solve: grid = (B, root_blocks).
+
+    d, z2: (B, K); rho, kprime: (B,).  Each grid row owns one problem's
+    VMEM-resident pole/weight vectors; the root blocks of different
+    problems are fully independent grid steps, so a whole level of the
+    batched merge tree is ONE kernel launch instead of B.  Per-problem
+    math is identical to :func:`secular_solve_pallas`.
+
+    Returns (origin (B, K) int32, tau (B, K)).
+    """
+    B, K = d.shape
+    C = min(root_block, K)
+    nblk = (K + C - 1) // C
+    grid = (B, nblk)
+    Kp = nblk * C
+
+    rho_arr = jnp.asarray(rho, d.dtype).reshape(B, 1)
+    kp_arr = jnp.asarray(kprime, jnp.int32).reshape(B, 1)
+
+    kernel = functools.partial(_secular_kernel, niter=niter,
+                               pole_tile=pole_tile, batched=True)
+    origin, tau = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, K), lambda b, i: (b, 0)),   # d, per problem
+            pl.BlockSpec((1, K), lambda b, i: (b, 0)),   # z2
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),   # rho
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),   # kprime
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C), lambda b, i: (b, i)),
+            pl.BlockSpec((1, C), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Kp), jnp.int32),
+            jax.ShapeDtypeStruct((B, Kp), d.dtype),
+        ],
+        interpret=interpret,
+    )(d, z2, rho_arr, kp_arr)
+    return origin[:, :K], tau[:, :K]

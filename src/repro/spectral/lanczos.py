@@ -68,3 +68,25 @@ def lanczos_tridiag(matvec: Callable, probe, num_steps: int, *,
                 basis.append(v)
     return jnp.stack(alphas), (jnp.stack(betas) if betas
                                else jnp.zeros((0,), jnp.float32))
+
+
+def lanczos_tridiag_batch(matvec: Callable, probes, num_steps: int, *,
+                          full_reorth: bool = True
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched Lanczos: all probes advance together, one matvec batch/step.
+
+    ``probes`` is a pytree whose leaves carry a leading probe axis (P,
+    ...); the distributed ``matvec`` is vmapped over that axis, so every
+    Lanczos step issues ONE batched operator application for the whole
+    probe set instead of P sequential ones.  ``matvec`` must therefore
+    be jax-traceable (pure jnp/lax ops) -- a callable that round-trips
+    through numpy/scipy worked with the old eager per-probe loop but
+    will fail under vmap tracing; wrap such operators with
+    ``jax.pure_callback`` or fall back to looping ``lanczos_tridiag``.
+    Returns (alpha (P, m), beta (P, m-1)) -- exactly the (B, n)/(B, n-1)
+    layout the batched BR eigensolver consumes, with no host round-trip
+    in between.
+    """
+    return jax.vmap(
+        lambda p: lanczos_tridiag(matvec, p, num_steps,
+                                  full_reorth=full_reorth))(probes)

@@ -1,0 +1,279 @@
+"""Batch-first solver core coverage.
+
+  * batched-vs-looped eigenvalue equality across families (uniform,
+    clustered, glued_wilkinson) at <= 8 * eps * ||T||;
+  * mixed-n bucket padding: different original sizes that pad into the
+    same (N, bucket) class share ONE SolvePlan and still solve exactly;
+  * return_boundary=True on a padded batched problem (per-problem tracked
+    row through the tree);
+  * plan cache: a second same-bucket call performs zero executor retraces;
+  * batched kernel dispatchers (XLA vmap + Pallas batch grid, interpret
+    mode) against loops of single solves and the dense batch oracles;
+  * one-device-solve instrumentation (SOLVE_COUNTER) for batches and for
+    the whole-batch SLQ pipeline, whose nodes/weights must match the
+    pre-refactor per-probe loop;
+  * SpectralEstimate.density vectorization pinned against the loop form.
+"""
+
+import numpy as np
+import pytest
+import scipy.linalg as sla
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SOLVE_COUNTER, eigvalsh_tridiagonal,
+                        eigvalsh_tridiagonal_batch, eigvalsh_tridiagonal_br,
+                        make_family_batch, make_plan)
+from repro.core import plan as plan_mod
+from repro.core import secular as sec
+from repro.core.instrument import SolveCounter
+from repro.kernels import ops, ref
+from repro.kernels.fused_update import secular_postpass_pallas_batch
+from repro.kernels.secular_roots import secular_solve_pallas_batch
+
+
+_family_batch = make_family_batch
+
+
+# ---------------------------------------------------------------------------
+# batched == looped, across families
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["uniform", "clustered", "glued_wilkinson"])
+@pytest.mark.parametrize("n,leaf", [(96, 8), (130, 16)])
+def test_batched_matches_looped_singles(family, n, leaf):
+    B = 4
+    ds, es = _family_batch(family, n, B)
+    res = eigvalsh_tridiagonal_batch(ds, es, leaf=leaf)
+    assert res.eigenvalues.shape == (B, n)
+    eps = np.finfo(np.float64).eps
+    for b in range(B):
+        single = eigvalsh_tridiagonal_br(ds[b], es[b], leaf=leaf)
+        tnorm = max(np.max(np.abs(np.asarray(single.eigenvalues))), 1.0)
+        err = np.max(np.abs(np.asarray(res.eigenvalues[b])
+                            - np.asarray(single.eigenvalues)))
+        assert err <= 8.0 * eps * tnorm, f"{family} b={b}: {err}"
+        # and both agree with LAPACK (cluster-width scale for glued)
+        lam_ref = sla.eigh_tridiagonal(ds[b], es[b], eigvals_only=True)
+        tol = 1e-7 if family == "glued_wilkinson" else 1e-11
+        assert np.max(np.abs(np.asarray(res.eigenvalues[b]) - lam_ref)) \
+            / tnorm < tol
+
+
+def test_api_routes_2d_inputs():
+    ds, es = _family_batch("normal", 64, 3)
+    lam = eigvalsh_tridiagonal(ds, es, leaf=16)   # native batched "br"
+    lam_eigh = eigvalsh_tridiagonal(ds, es, method="eigh")  # looped baseline
+    np.testing.assert_allclose(np.asarray(lam), np.asarray(lam_eigh),
+                               rtol=0, atol=1e-11)
+
+
+# ---------------------------------------------------------------------------
+# mixed-n bucket padding + plan cache
+# ---------------------------------------------------------------------------
+
+def test_mixed_n_same_bucket_shares_plan():
+    """n=100 and n=120 both pad to N=128 at leaf=32; with the same batch
+    bucket they must resolve to the SAME cached plan and solve exactly."""
+    p1 = make_plan(100, 3, leaf=32)
+    p2 = make_plan(120, 4, leaf=32)
+    assert p1 is p2
+    assert p1.padded_n == 128 and p1.batch_bucket_size == 4
+
+    for n in (100, 120):
+        ds, es = _family_batch("uniform", n, 3, seed0=7)
+        res = p1.execute(ds, es)
+        assert res.eigenvalues.shape == (3, n)
+        for b in range(3):
+            lam_ref = sla.eigh_tridiagonal(ds[b], es[b], eigvals_only=True)
+            np.testing.assert_allclose(np.asarray(res.eigenvalues[b]),
+                                       lam_ref, rtol=0, atol=1e-10)
+
+
+def test_same_bucket_second_call_no_retrace():
+    ds5, es5 = _family_batch("normal", 100, 5, seed0=1)
+    eigvalsh_tridiagonal_batch(ds5, es5, leaf=32)      # bucket 8, may trace
+    before = plan_mod.EXECUTOR_TRACES.count
+    ds7, es7 = _family_batch("normal", 120, 7, seed0=9)  # same N=128, bucket 8
+    eigvalsh_tridiagonal_batch(ds7, es7, leaf=32)
+    assert plan_mod.EXECUTOR_TRACES.count == before, \
+        "second same-bucket call retraced the executor"
+
+
+def test_batch_bucket_rounding():
+    assert [plan_mod.batch_bucket(b) for b in (1, 2, 3, 5, 8, 9, 256)] == \
+        [1, 2, 4, 8, 8, 16, 256]
+    with pytest.raises(ValueError):
+        plan_mod.batch_bucket(0)
+
+
+# ---------------------------------------------------------------------------
+# boundary rows on a padded batched problem
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,leaf", [(100, 8), (130, 32)])
+def test_batched_return_boundary_padded(n, leaf):
+    B = 3
+    ds, es = _family_batch("uniform", n, B, seed0=3)
+    with SOLVE_COUNTER.measure() as window:
+        res = eigvalsh_tridiagonal_batch(ds, es, leaf=leaf,
+                                         return_boundary=True)
+    assert window.count == 1, "batched boundary solve must be ONE launch"
+    for b in range(B):
+        A = np.diag(ds[b]) + np.diag(es[b], 1) + np.diag(es[b], -1)
+        w, V = np.linalg.eigh(A)
+        np.testing.assert_allclose(np.asarray(res.eigenvalues[b]), w,
+                                   atol=1e-10)
+        assert np.max(np.abs(np.abs(np.asarray(res.blo[b]))
+                             - np.abs(V[0]))) < 1e-9
+        assert np.max(np.abs(np.abs(np.asarray(res.bhi[b]))
+                             - np.abs(V[-1]))) < 1e-9
+        assert abs(np.linalg.norm(np.asarray(res.bhi[b])) - 1.0) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# batched kernel dispatchers
+# ---------------------------------------------------------------------------
+
+def _secular_batch(B, K, kprimes, seed=0):
+    rng = np.random.default_rng(seed)
+    ds, zs = [], []
+    for kp in kprimes:
+        d = np.sort(rng.standard_normal(K))
+        d[kp:] += 10.0
+        z = rng.standard_normal(K)
+        z[kp:] = 0.0
+        z /= max(np.linalg.norm(z), 1e-30)
+        ds.append(d)
+        zs.append(z)
+    rho = 0.4 + 0.1 * np.arange(B)
+    return (jnp.asarray(np.stack(ds)), jnp.asarray(np.stack(zs)),
+            jnp.asarray(rho), jnp.asarray(kprimes, jnp.int32))
+
+
+def test_batched_secular_solve_matches_loop_and_pallas():
+    B, K = 4, 96
+    d, z, rho, kprime = _secular_batch(B, K, [96, 50, 1, 77])
+    o_b, t_b = ops.secular_solve_batched(d, z * z, rho, kprime, niter=24)
+    for b in range(B):
+        o_s, t_s = sec.secular_solve(d[b], (z * z)[b], rho[b], kprime[b],
+                                     niter=24)
+        assert np.array_equal(np.asarray(o_b[b]), np.asarray(o_s))
+        np.testing.assert_array_equal(np.asarray(t_b[b]), np.asarray(t_s))
+
+    o_p, t_p = secular_solve_pallas_batch(d, z * z, rho, kprime, niter=24,
+                                          interpret=True)
+    lam_b = np.take_along_axis(np.asarray(d), np.asarray(o_b), 1) \
+        + np.asarray(t_b)
+    lam_p = np.take_along_axis(np.asarray(d), np.asarray(o_p), 1) \
+        + np.asarray(t_p)
+    np.testing.assert_allclose(lam_p, lam_b, rtol=0, atol=1e-13)
+
+
+def test_batched_postpass_matches_oracle_and_pallas():
+    B, K = 3, 64
+    d, z, rho, kprime = _secular_batch(B, K, [64, 40, 17], seed=5)
+    origin, tau = sec.secular_solve_batched(d, z * z, rho, kprime, niter=24)
+    R = jnp.asarray(np.random.default_rng(6).standard_normal((B, 2, K)))
+
+    zh_x, rows_x = ops.secular_postpass_batched(R, d, z, origin, tau,
+                                                kprime, rho)
+    zh_o, rows_o = ref.secular_postpass_batch_ref(R, d, z, origin, tau,
+                                                  kprime, rho)
+    np.testing.assert_allclose(np.asarray(zh_x), np.asarray(zh_o),
+                               rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(rows_x), np.asarray(rows_o),
+                               rtol=1e-10, atol=1e-12)
+
+    zh_p, rows_p = secular_postpass_pallas_batch(R, d, z, origin, tau,
+                                                 kprime, rho, interpret=True)
+    np.testing.assert_allclose(np.asarray(zh_p), np.asarray(zh_x),
+                               rtol=0, atol=1e-13)
+    np.testing.assert_allclose(np.asarray(rows_p), np.asarray(rows_x),
+                               rtol=0, atol=1e-13)
+
+
+# ---------------------------------------------------------------------------
+# instrumentation + SLQ single-solve pipeline
+# ---------------------------------------------------------------------------
+
+def test_solve_counter_semantics():
+    c = SolveCounter("t")
+    with c.measure() as w:
+        c.increment()
+        c.increment(2)
+        assert w.count == 3
+    # windows are views, not resets: global tally unaffected by exit
+    assert c.count == 3
+    c.reset()
+    assert c.count == 0
+
+
+def test_batch_is_one_device_solve():
+    ds, es = _family_batch("normal", 80, 6, seed0=11)
+    with SOLVE_COUNTER.measure() as window:
+        eigvalsh_tridiagonal_batch(ds, es, leaf=16)
+    assert window.count == 1
+
+
+def _sym_matvec(A):
+    def mv(v):
+        return {"x": A @ v["x"]}
+    return mv
+
+
+@pytest.mark.parametrize("num_probes", [1, 5])
+def test_slq_single_device_solve_matches_loop(num_probes):
+    """The batched SLQ pipeline is ONE device solve for any num_probes and
+    reproduces the pre-refactor per-probe loop's nodes/weights."""
+    from repro.spectral import slq_spectrum
+    from repro.spectral.lanczos import lanczos_tridiag
+    from repro.spectral.slq import _rademacher_like
+
+    rng = np.random.default_rng(2)
+    M = rng.standard_normal((30, 30))
+    A = jnp.asarray(M @ M.T / 30 + np.eye(30))
+    params = {"x": jnp.zeros(30)}
+    key = jax.random.PRNGKey(7)
+    num_steps = 16
+
+    with SOLVE_COUNTER.measure() as window:
+        est = slq_spectrum(_sym_matvec(A), params, key,
+                           num_probes=num_probes, num_steps=num_steps)
+    assert window.count == 1, \
+        f"SLQ must be one device solve, saw {window.count}"
+
+    # pre-refactor reference: per-probe Lanczos + per-probe single solves
+    nodes_ref, weights_ref = [], []
+    for k in range(num_probes):
+        probe = _rademacher_like(jax.random.fold_in(key, k), params)
+        alpha, beta = lanczos_tridiag(_sym_matvec(A), probe, num_steps)
+        res = eigvalsh_tridiagonal_br(
+            np.asarray(alpha, np.float64), np.asarray(beta, np.float64),
+            leaf=8, return_boundary=True)
+        nodes_ref.append(np.asarray(res.eigenvalues))
+        weights_ref.append(np.asarray(res.blo) ** 2)
+    np.testing.assert_allclose(est.nodes, np.stack(nodes_ref),
+                               rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(est.weights, np.stack(weights_ref),
+                               rtol=1e-5, atol=1e-8)
+
+
+def test_density_vectorized_matches_loop():
+    from repro.spectral import SpectralEstimate
+    rng = np.random.default_rng(4)
+    nodes = np.sort(rng.uniform(0.0, 5.0, size=(3, 12)), axis=1)
+    weights = rng.uniform(0.0, 1.0, size=(3, 12))
+    est = SpectralEstimate(nodes=nodes, weights=weights, lam_max=5.0,
+                           lam_min=0.0, trace_est=0.0)
+    grid = np.linspace(-1.0, 6.0, 157)
+    dens = est.density(grid)
+
+    sigma = max((np.max(nodes) - np.min(nodes)) / 100.0, 1e-12)
+    expect = np.zeros_like(grid)
+    for k in range(nodes.shape[0]):
+        for lam, w in zip(nodes[k], weights[k]):
+            expect += w * np.exp(-0.5 * ((grid - lam) / sigma) ** 2)
+    expect /= (nodes.shape[0] * np.sqrt(2 * np.pi) * sigma)
+    np.testing.assert_allclose(dens, expect, rtol=1e-13, atol=1e-15)

@@ -136,9 +136,9 @@ def test_return_boundary_padded_is_single_solve(n, leaf):
     N, _ = br_dc._tree_shape(n, leaf)
     assert N != n, "test must exercise the padded path"
 
-    before = br_dc.SOLVE_INVOCATIONS
-    res = eigvalsh_tridiagonal_br(d, e, leaf=leaf, return_boundary=True)
-    assert br_dc.SOLVE_INVOCATIONS == before + 1, \
+    with br_dc.SOLVE_COUNTER.measure() as window:
+        res = eigvalsh_tridiagonal_br(d, e, leaf=leaf, return_boundary=True)
+    assert window.count == 1, \
         "padded return_boundary ran more than one D&C solve"
 
     A = np.asarray(dense_from_tridiag(d, e))
