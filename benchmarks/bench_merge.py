@@ -1,0 +1,146 @@
+"""Merge-level benchmarks: parallel deflation head + resident merge.
+
+Measures the two tentpole claims of the deflation/residency PR, isolated
+and end-to-end, on low-deflation vs high-deflation inputs:
+
+  * ``deflate_head_*`` -- the close-pole deflation head ALONE (jitted
+    level-scope dispatch vs the vmapped sequential DLAED2 chain) on
+    synthetic sorted-pole levels with a controlled close-pair fraction:
+    0 (low deflation: the steady state, where the head is pure detection)
+    and 0.25 (high deflation: planted duplicate poles, the glued-family
+    regime, where the escalation tiers carry the chain).
+  * ``solver_deflate_*`` -- full BR solver, parallel head (default
+    budget) vs sequential chain (``deflate_budget=0``), on the
+    glued-Wilkinson (deflation-heavy) and normal (low-deflation)
+    families; ``derived`` carries the speedup and the per-level
+    deflation ratio observed by the ``SolveCounter`` gauge.
+  * ``resident_*`` -- the single-launch resident merge
+    (``secular_merge_resident_batched``) vs the two-launch dense
+    solve + post-pass pipeline at sub-threshold K (the dispatch the
+    Pallas kernel collapses on TPU; on CPU the win is the avoided
+    intermediate materialization, which grows with K).
+
+A/B pairs are measured interleaved (common.time_pair) so load drift on
+shared hosts cannot masquerade as a speedup.  Rows feed BENCH_merge.json
+via ``python -m benchmarks.run --only merge --json BENCH_merge.json``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_pair
+from repro.core import br_dc
+from repro.core import eigvalsh_tridiagonal_br, make_family
+from repro.core import merge as _merge
+from repro.core import secular as sec
+
+
+def _head_problem(W, K, close_frac, seed=0):
+    """One synthetic merge level: (W, K) sorted poles with a planted
+    fraction of exactly-close pairs (duplicate pole values)."""
+    rng = np.random.default_rng(seed)
+    d = np.sort(rng.standard_normal((W, K)), axis=1)
+    ncl = int(close_frac * K)
+    if ncl:
+        for w in range(W):
+            ix = rng.choice(K - 1, ncl, replace=False)
+            d[w, ix + 1] = d[w, ix] + 1e-16
+        d = np.sort(d, axis=1)
+    z = rng.standard_normal((W, K))
+    z /= np.linalg.norm(z, axis=1, keepdims=True)
+    tol = 8 * np.finfo(np.float64).eps * np.max(np.abs(d), axis=1)
+    small = 1.0 * np.abs(z) <= tol[:, None]
+    R = rng.standard_normal((W, 2, K))
+    return (jnp.asarray(d), jnp.asarray(z), jnp.asarray(R),
+            jnp.asarray(small), jnp.asarray(tol))
+
+
+def run(report, quick=False):
+    # ---- isolated deflation head: sequential chain vs parallel head ----
+    @jax.jit
+    def head_seq(d, z, R, small, tol):
+        return jax.vmap(_merge._close_pole_scan)(d, z, R, small, tol)
+
+    @functools.partial(jax.jit, static_argnames=("budget",))
+    def head_par(d, z, R, small, tol, budget=_merge.DEFAULT_DEFLATE_BUDGET):
+        return _merge._deflate_level(d, z, R, small, tol, budget=budget)
+
+    shapes = ((8, 512), (2, 1024)) if quick else ((8, 512), (2, 1024),
+                                                  (1, 2048))
+    for W, K in shapes:
+        for frac, label in ((0.0, "lowdefl"), (0.25, "highdefl")):
+            args = _head_problem(W, K, frac)
+            nrot = int(np.asarray(head_seq(*args)[3]).sum()
+                       - np.asarray(args[3]).sum())
+            t_seq, t_par = time_pair(lambda: head_seq(*args)[0],
+                                     lambda: head_par(*args)[0], iters=11)
+            report(f"deflate_head_seq_{label}_W{W}_K{K}", t_seq,
+                   f"sequential chain, {nrot} rotations")
+            report(f"deflate_head_par_{label}_W{W}_K{K}", t_par,
+                   f"detect+tiered chain, speedup={t_seq / t_par:.2f}x")
+
+    # ---- full solver: parallel head vs sequential chain ----------------
+    sizes = (512, 1024) if quick else (1024, 2048)
+    for fam in ("glued_wilkinson", "normal"):
+        for n in sizes:
+            d, e = make_family(fam, n)
+            t_seq, t_par = time_pair(
+                lambda: eigvalsh_tridiagonal_br(
+                    d, e, deflate_budget=0).eigenvalues,
+                lambda: eigvalsh_tridiagonal_br(d, e).eigenvalues,
+                iters=13)
+            with br_dc.SOLVE_COUNTER.measure(deflation=True) as w:
+                eigvalsh_tridiagonal_br(d, e).eigenvalues.block_until_ready()
+            ratios = w.deflation_ratios
+            top = max(ratios) if ratios else 0
+            gauge = f"kprime/K@top={ratios.get(top, 1.0):.2f}"
+            report(f"solver_deflate_seq_{fam}_n{n}", t_seq,
+                   "sequential chain (deflate_budget=0)")
+            report(f"solver_deflate_par_{fam}_n{n}", t_par,
+                   f"speedup={t_seq / t_par:.2f}x, {gauge}")
+
+    # ---- resident merge: one launch vs two-launch solve+postpass -------
+    rng = np.random.default_rng(0)
+    Ks = (128, 256) if quick else (128, 256, 512)
+    for K in Ks:
+        W = 8
+        d = jnp.asarray(np.sort(rng.standard_normal((W, K)), axis=1))
+        z = rng.standard_normal((W, K))
+        z /= np.linalg.norm(z, axis=1, keepdims=True)
+        z = jnp.asarray(z)
+        rho = jnp.full((W,), 0.7)
+        kp = jnp.full((W,), K, jnp.int32)
+        R = jnp.asarray(rng.standard_normal((W, 2, K)))
+        z2 = z * z
+
+        @jax.jit
+        def launch_solve(d, z2, rho, kp):
+            return sec.secular_solve_batched(d, z2, rho, kp, dense=True)
+
+        @jax.jit
+        def launch_post(R, d, z, origin, tau, kp, rho):
+            return sec.secular_postpass_batched(R, d, z, origin, tau, kp,
+                                                rho, dense=True)
+
+        @jax.jit
+        def launch_one(d, z, R, rho, kp):
+            return sec.secular_merge_resident_batched(d, z, R, rho, kp)
+
+        def two_launch():
+            o, t = launch_solve(d, z2, rho, kp)
+            return launch_post(R, d, z, o, t, kp, rho)[1]
+
+        def one_launch():
+            return launch_one(d, z, R, rho, kp)[3]
+
+        t2, t1 = time_pair(two_launch, one_launch, iters=21)
+        report(f"resident_twolaunch_W{W}_K{K}", t2,
+               "dense solve + postpass, 2 dispatches")
+        report(f"resident_onelaunch_W{W}_K{K}", t1,
+               f"fused resident merge, speedup={t2 / t1:.2f}x")

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import merge as _merge
+from repro.core.secular import DEFAULT_NITER
 from repro.core.br_dc import _leaf_solve, _pad_problem, _level_coupling
 
 
@@ -96,7 +97,7 @@ def _full_dc_jit(d_adj, e_pad, *, leaf, chunk, niter, use_zhat):
 
 
 def eig_tridiagonal_full_dc(d, e, *, leaf: int = 32, chunk: int = 128,
-                            niter: int = 24, use_zhat: bool = True,
+                            niter: int = DEFAULT_NITER, use_zhat: bool = True,
                             dtype=None):
     """Conventional full-eigenvector D&C.  Returns (eigenvalues, Q)."""
     d_adj, e_pad, n, N, L = _prepare(d, e, leaf, dtype)
@@ -199,7 +200,7 @@ def _lazy_dc_jit(d_adj, e_pad, *, leaf, chunk, niter, use_zhat):
 
 
 def eigvalsh_tridiagonal_lazy(d, e, *, leaf: int = 32, chunk: int = 128,
-                              niter: int = 24, use_zhat: bool = True,
+                              niter: int = DEFAULT_NITER, use_zhat: bool = True,
                               dtype=None):
     """Internal values-only D&C with lazy replay (quadratic workspace)."""
     d_adj, e_pad, n, N, L = _prepare(d, e, leaf, dtype)

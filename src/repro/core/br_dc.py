@@ -43,6 +43,7 @@ import jax.numpy as jnp
 
 from repro.core import merge as _merge
 from repro.core.instrument import SolveCounter
+from repro.core.secular import DEFAULT_NITER
 
 # Device-solve instrumentation: one increment per executor launch (a batch
 # of B problems is ONE solve).  Regression tests pin one-solve invariants
@@ -143,7 +144,7 @@ def _level_coupling(e_pad, level: int, leaf: int, num_merges: int):
 
 def _br_dc_padded_batch(d_pad, e_pad, track, *, leaf, chunk, niter, use_zhat,
                         return_boundary, tol_factor, stream_threshold,
-                        fused):
+                        deflate_budget, resident_threshold, fused):
     """Batch-first padded D&C body (traced; jitted by plan._executor).
 
     d_pad, e_pad: (B, N); track: (B,) int32 per-problem tracked original
@@ -204,7 +205,9 @@ def _br_dc_padded_batch(d_pad, e_pad, track, *, leaf, chunk, niter, use_zhat,
             lam_pairs, z_inner, R, rho, sgn,
             niter=niter, chunk=chunk, use_zhat=use_zhat,
             root_mode=root, tol_factor=tol_factor,
-            stream_threshold=stream_threshold, fused=fused)
+            stream_threshold=stream_threshold,
+            deflate_budget=deflate_budget,
+            resident_threshold=resident_threshold, fused=fused)
         lam, rows = res.lam, res.rows             # (B, nm, 2M) / (B, nm, r, 2M)
         kprimes.append(res.kprime)                # (B, nm)
 
@@ -226,10 +229,13 @@ def _as_batch(d, e, dtype):
 
 
 def eigvalsh_tridiagonal_batch(d, e, *, leaf: int = 32, chunk: int = 256,
-                               niter: int = 16, use_zhat: bool = True,
+                               niter: int = DEFAULT_NITER,
+                               use_zhat: bool = True,
                                return_boundary: bool = False,
                                tol_factor: float = 8.0,
                                stream_threshold: int | None = None,
+                               deflate_budget: int | None = None,
+                               resident_threshold: int | None = None,
                                fused: bool = True,
                                dtype=None) -> BRBatchResult:
     """All eigenvalues of B independent symmetric tridiagonals at once.
@@ -264,16 +270,21 @@ def eigvalsh_tridiagonal_batch(d, e, *, leaf: int = 32, chunk: int = 256,
     p = _plan.make_plan(n, B, leaf=leaf, chunk=chunk, niter=niter,
                         use_zhat=use_zhat, return_boundary=return_boundary,
                         tol_factor=tol_factor,
-                        stream_threshold=stream_threshold, fused=fused,
+                        stream_threshold=stream_threshold,
+                        deflate_budget=deflate_budget,
+                        resident_threshold=resident_threshold, fused=fused,
                         dtype=d.dtype)
     return p.execute(d, e)
 
 
 def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
-                            niter: int = 16, use_zhat: bool = True,
+                            niter: int = DEFAULT_NITER,
+                            use_zhat: bool = True,
                             return_boundary: bool = False,
                             tol_factor: float = 8.0,
                             stream_threshold: int | None = None,
+                            deflate_budget: int | None = None,
+                            resident_threshold: int | None = None,
                             fused: bool = True,
                             dtype=None) -> BRResult:
     """All eigenvalues of the symmetric tridiagonal (d, e) via boundary-row D&C.
@@ -299,6 +310,15 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
         memory for batch parallelism at the bottom of the tree).  None
         picks the backend-aware default: 0 on CPU (stream everything),
         512 on accelerators (see merge.default_stream_threshold).
+      deflate_budget: rotation-candidate budget of the parallel deflation
+        head (merges run a short exact close-pole chain over at most this
+        many candidates instead of a K-step scan; overflow escalates to
+        exact K/2 / full-K tiers).  None: the library default
+        (merge.DEFAULT_DEFLATE_BUDGET); <= 0 forces the sequential chain.
+      resident_threshold: merges with K at or below it run the secular
+        solve + fused post-pass as ONE resident dispatch (a single Pallas
+        launch per level on TPU).  None picks the backend-aware default:
+        0 on CPU, 512 on accelerators (merge.default_resident_threshold).
       fused: use the single-pass fused conquer post-phase (False: legacy
         two-pass, kept as benchmark baseline).
     """
@@ -322,7 +342,9 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
                         use_zhat=use_zhat,
                         return_boundary=return_boundary or L == 0,
                         tol_factor=tol_factor,
-                        stream_threshold=stream_threshold, fused=fused,
+                        stream_threshold=stream_threshold,
+                        deflate_budget=deflate_budget,
+                        resident_threshold=resident_threshold, fused=fused,
                         dtype=d.dtype)
     res = p.execute(d[None, :], e[None, :])
     blo = None if res.blo is None else res.blo[0]

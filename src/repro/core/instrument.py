@@ -6,6 +6,15 @@ invariants like "padded ``return_boundary`` costs exactly one solve" and
 "SLQ performs one device solve for any number of probes" against these
 counters, so they must be cheap, thread-safe, and easy to scope to a
 code region without races between tests.
+
+Counters also carry an opt-in **deflation-ratio gauge**: the per-level
+observed secular rank fraction ``kprime / K``.  Deflation is the paper's
+(and LAPACK's) dominant effective-work lever -- a glued-Wilkinson merge
+that deflates 90% of its poles does 10% of the secular work -- so
+benchmarks want it visible without re-running the solver.  Recording
+requires a host transfer of the (tiny) per-level kprime arrays, so it is
+gated: only ``measure(deflation=True)`` windows enable it, and the
+steady-state solve path pays nothing.
 """
 
 from __future__ import annotations
@@ -17,14 +26,34 @@ import threading
 class CounterWindow:
     """A read-only view of a :class:`SolveCounter` since a start mark."""
 
-    def __init__(self, counter: "SolveCounter", start: int):
+    def __init__(self, counter: "SolveCounter", start: int,
+                 deflation_start: int = 0):
         self._counter = counter
         self._start = start
+        self._deflation_start = deflation_start
 
     @property
     def count(self) -> int:
         """Increments observed since the window opened."""
         return self._counter.count - self._start
+
+    @property
+    def deflation_ratios(self) -> dict:
+        """Per-level observed deflation, aggregated over the window.
+
+        Maps merge-tree level -> mean ``kprime / K`` across every node of
+        every solve recorded since the window opened (level 0 is the
+        leaf-pair merge).  Empty unless the window was opened with
+        ``measure(deflation=True)`` and at least one solve ran.
+        """
+        events = self._counter.deflation_events(self._deflation_start)
+        acc: dict[int, list] = {}
+        for level, kprime_sum, total in events:
+            s = acc.setdefault(level, [0.0, 0])
+            s[0] += kprime_sum
+            s[1] += total
+        return {level: s[0] / s[1] for level, s in sorted(acc.items())
+                if s[1] > 0}
 
 
 class SolveCounter:
@@ -43,12 +72,19 @@ class SolveCounter:
     ALL threads, so exact-count assertions belong in code that owns the
     counter for the measured region (the test suite runs solves
     sequentially).  ``reset()`` exists for callers that want a hard zero.
+
+    ``measure(deflation=True)`` additionally enables the deflation-ratio
+    gauge for the window's lifetime: the solver records per-level
+    ``(kprime_sum, total_poles)`` after each solve and the window exposes
+    the aggregate through ``window.deflation_ratios``.
     """
 
     def __init__(self, name: str = "solves"):
         self.name = name
         self._lock = threading.Lock()
         self._count = 0
+        self._deflation: list[tuple[int, float, int]] = []
+        self._deflation_depth = 0
 
     @property
     def count(self) -> int:
@@ -59,14 +95,49 @@ class SolveCounter:
         with self._lock:
             self._count += n
 
+    @property
+    def deflation_enabled(self) -> bool:
+        """True while at least one ``measure(deflation=True)`` window is
+        open -- the solver checks this before paying the host transfer."""
+        with self._lock:
+            return self._deflation_depth > 0
+
+    def record_deflation(self, level: int, kprime_sum: float,
+                         total: int) -> None:
+        """Record one level's observed secular rank: ``kprime_sum`` summed
+        over the level's nodes, ``total`` the corresponding pole count."""
+        with self._lock:
+            self._deflation.append((int(level), float(kprime_sum),
+                                    int(total)))
+
+    def deflation_events(self, start: int = 0) -> list:
+        with self._lock:
+            return list(self._deflation[start:])
+
     def reset(self) -> None:
         with self._lock:
             self._count = 0
+            self._deflation.clear()
 
     @contextlib.contextmanager
-    def measure(self):
-        """Context manager yielding a window counting from entry."""
-        yield CounterWindow(self, self.count)
+    def measure(self, deflation: bool = False):
+        """Context manager yielding a window counting from entry.
+
+        Args:
+          deflation: also enable the deflation-ratio gauge while the
+            window is open (costs one tiny host transfer per solve).
+        """
+        with self._lock:
+            start = self._count
+            dstart = len(self._deflation)
+            if deflation:
+                self._deflation_depth += 1
+        try:
+            yield CounterWindow(self, start, dstart)
+        finally:
+            if deflation:
+                with self._lock:
+                    self._deflation_depth -= 1
 
     def __int__(self) -> int:
         return self.count

@@ -9,11 +9,26 @@ spectrum and the parent's selected rows:
     R_new  = R_child @ S_v  via selected-row streaming  (Lemma 3.2)
 
 The deflation pipeline mirrors LAPACK DLAED2 exactly (z-small test, then the
-sequential close-pole Givens chain with the same (c, s) convention and
-diagonal-value updates), but in a fixed-shape masked formulation: deflation
-yields a compaction permutation + a traced active count K', never a dynamic
-shape.  This is the XLA/TPU adaptation recorded in DESIGN.md -- semantics are
+close-pole Givens chain with the same (c, s) convention and diagonal-value
+updates), but in a fixed-shape masked formulation: deflation yields a
+compaction permutation + a traced active count K', never a dynamic shape.
+This is the XLA/TPU adaptation recorded in DESIGN.md -- semantics are
 preserved, shapes are static.
+
+The close-pole chain itself runs in a detect-compact-apply formulation
+(parallel deflation head): the chain's "previous kept pole" linkage is fully
+determined by the z-small mask, so close-pair candidates are detected in one
+vectorized sweep, compacted into a fixed ``deflate_budget`` (with K/2 and
+full-K escalation tiers for rotation-heavy levels), and the exact DLAED2
+rotation chain runs only over that short list -- O(budget) dependent
+steps per level instead of O(K).  A vectorized post-check proves the
+restriction exact; a detected miss falls back to the sequential chain via
+a level-scope ``lax.cond`` (one branch executes at runtime -- the cond
+sits above the per-node vmap).  The restricted chain
+performs the same rotations with the same operands in the same order as
+the sequential one, so results are bit-identical whenever no rotation
+fires (the low-deflation steady state) and agree to the compiler's
+FMA-contraction freedom (one ulp per rotation update) otherwise.
 
 The same `merge_node` serves three algorithms (DESIGN.md section 2):
   * BR (paper):       R has 2 rows -> O(n) persistent state.
@@ -24,6 +39,7 @@ The same `merge_node` serves three algorithms (DESIGN.md section 2):
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -112,6 +128,194 @@ def _close_pole_scan(d, z, R, small, tol):
     return d, z, R, defl
 
 
+# Tight-tier budget for the compacted close-pole rotation list.  Close
+# pairs need BOTH poles' z entries above the z-small threshold, so
+# random-spectrum families (uniform/normal/clustered) carry at most a
+# handful of rotation candidates per node and 64 covers them with a wide
+# margin; genuinely rotation-heavy spectra (glued Wilkinson's repeated
+# cross-block eigenvalues reach O(K/4) candidates at the top merges)
+# escalate to the exact K/2 and full-K tiers (see ``_deflate_level``),
+# so the budget is a speed knob, never a semantics knob.  <= 0 disables
+# the parallel head entirely (always sequential -- the benchmark
+# baseline).
+DEFAULT_DEFLATE_BUDGET = 64
+
+
+def _deflate_candidates(d, z, small, tol):
+    """Vectorized close-pair detection over one node's sorted poles.
+
+    The sequential chain's "previous kept pole" linkage depends only on the
+    z-small mask (rotation-deflated poles are never a 'previous' again:
+    the carry moves to the surviving partner), so it is precomputable as an
+    exclusive running maximum.  The DLAED2 closeness test is then evaluated
+    for every kept pole against its predecessor in one sweep, plus two
+    hops of successor propagation (a rotation rewrites the values its
+    successor's test sees, so the successor must be re-tested exactly in
+    the compacted chain).  Deeper cascades are caught by the post-hoc
+    missed-rotation check and routed to the sequential fallback.
+
+    Returns (candidate_mask (K,) bool, prevkept (K,) int32 with -1 for
+    "no kept pole before me").
+    """
+    K = d.shape[0]
+    idx = jnp.arange(K, dtype=jnp.int32)
+    kept = ~small
+    pkc = jax.lax.cummax(jnp.where(kept, idx, jnp.int32(-1)))
+    prevkept = jnp.concatenate(
+        [jnp.full((1,), -1, jnp.int32), pkc[:-1]])
+    pk_safe = jnp.maximum(prevkept, 0)
+
+    pz = z[pk_safe]
+    tau_g = jnp.hypot(pz, z)
+    tau_safe = jnp.where(tau_g > 0.0, tau_g, 1.0)
+    c = z / tau_safe
+    s_g = -pz / tau_safe
+    t = d - d[pk_safe]
+    link = kept & (prevkept >= 0)
+    close0 = link & (jnp.abs(t * c * s_g) <= tol) & (tau_g > 0.0)
+    cand = close0 | (link & close0[pk_safe])
+    cand = cand | (link & cand[pk_safe])
+    return cand, prevkept
+
+
+def _deflate_apply(d, z, R, small, tol, prevkept, cand, count, *, budget):
+    """Exact DLAED2 chain restricted to the compacted candidate list.
+
+    Runs ``budget`` dependent steps (vs K for the full chain), each the
+    verbatim arithmetic of :func:`_close_pole_scan`'s step on candidate
+    pole ``i`` against its precomputed predecessor ``prevkept[i]`` -- the
+    array state at that point equals the sequential carry exactly (the
+    carry is redundant with the in-place updates), so whenever no
+    rotation was missed (checked afterwards) the chains perform identical
+    rotations on identical operands; any residual difference is XLA's
+    per-program FMA-contraction choice in the update arithmetic (<= 1 ulp
+    per rotation, zero when nothing rotates).  Slots past the traced
+    candidate ``count`` are no-ops.
+    """
+    K = d.shape[0]
+    idx = jnp.arange(K, dtype=jnp.int32)
+    order = jnp.argsort(jnp.where(cand, idx, jnp.int32(K)))[:budget]
+
+    def step(carry, inp):
+        d_arr, z_arr, Rc, defl = carry
+        i, slot = inp
+        valid = slot < count
+        j = prevkept[i]
+        j_safe = jnp.maximum(j, 0)
+        # Paired gathers/scatters: one 2-element op per array instead of
+        # two scalar ops -- the scan step is launch-bound, not flop-bound.
+        # (When j == -1 and i == 0 the pair aliases index 0, but then
+        # close is False and both lanes write the value just read.)
+        ij = jnp.stack([j_safe, i])
+        dv = d_arr[ij]
+        zv = z_arr[ij]
+        pd, d_i = dv[0], dv[1]
+        pz, z_i = zv[0], zv[1]
+
+        tau_g = jnp.hypot(pz, z_i)
+        tau_safe = jnp.where(tau_g > 0.0, tau_g, 1.0)
+        c = z_i / tau_safe          # LAPACK: C = Z(NJ)/TAU
+        s_g = -pz / tau_safe        # LAPACK: S = -Z(PJ)/TAU
+        t = d_i - pd
+        close = (valid & (j >= 0) & (~small[i])
+                 & (jnp.abs(t * c * s_g) <= tol) & (tau_g > 0.0))
+
+        d_p_new = pd * c * c + d_i * s_g * s_g
+        d_i_new = pd * s_g * s_g + d_i * c * c
+        cols = Rc[:, ij]                         # (r, 2)
+        col_p, col_i = cols[:, 0], cols[:, 1]
+        new_cols = jnp.stack([c * col_p + s_g * col_i,
+                              -s_g * col_p + c * col_i], axis=1)
+
+        d_arr = d_arr.at[ij].set(
+            jnp.where(close, jnp.stack([d_p_new, d_i_new]), dv))
+        z_arr = z_arr.at[ij].set(
+            jnp.where(close, jnp.stack([jnp.zeros_like(tau_g), tau_g]), zv))
+        Rc = Rc.at[:, ij].set(jnp.where(close, new_cols, cols))
+        defl = defl.at[j_safe].set(defl[j_safe] | close)
+        return (d_arr, z_arr, Rc, defl), None
+
+    init = (d, z, R, jnp.asarray(small))
+    (d, z, R, defl), _ = jax.lax.scan(
+        step, init, (order.astype(jnp.int32),
+                     jnp.arange(budget, dtype=jnp.int32)))
+    return d, z, R, defl
+
+
+def _deflate_missed(d0, z0, d1, z1, small, tol, prevkept, cand):
+    """Exact post-hoc check that no unprocessed step would have rotated.
+
+    For a kept pole ``i`` outside the candidate list, the sequential chain
+    would test it with its predecessor's POST-step values (== the final
+    arrays ``d1/z1`` at ``prevkept[i]``: a predecessor is only ever
+    modified at its own step or at step ``i`` itself, which did not run)
+    and with ``i``'s PRE-step values (== the originals ``d0/z0``: ``i`` is
+    only modified at step ``i`` or later).  If any such test fires, the
+    restricted chain diverged from the sequential one -- fall back.
+    By induction over steps this check passing proves bit-equality.
+    """
+    pk_safe = jnp.maximum(prevkept, 0)
+    pz = z1[pk_safe]
+    tau_g = jnp.hypot(pz, z0)
+    tau_safe = jnp.where(tau_g > 0.0, tau_g, 1.0)
+    c = z0 / tau_safe
+    s_g = -pz / tau_safe
+    t = d0 - d1[pk_safe]
+    close = ((~small) & (prevkept >= 0)
+             & (jnp.abs(t * c * s_g) <= tol) & (tau_g > 0.0))
+    return jnp.any(close & ~cand)
+
+
+def _deflate_level(d, z, R, small, tol, *, budget: int):
+    """Close-pole deflation for one whole level: (W, K) nodes at once.
+
+    Parallel head: detect -> compact -> short exact chain at the smallest
+    budget tier that holds the level's candidate count (tight budget,
+    K/2, full K), with a level-scope ``lax.cond`` fallback to the vmapped
+    sequential chain if the missed-rotation check fires.  The tier switch
+    and the cond sit ABOVE the per-node vmap, so exactly one path
+    executes at runtime (under a vmapped cond both branches would run as
+    selects -- the level critical path this head exists to shorten).
+    """
+    W, K = d.shape
+    seq = jax.vmap(_close_pole_scan)
+    if budget <= 0 or budget >= K:
+        # Parallel head cannot shorten the chain (disabled, or the budget
+        # does not undercut K): run the sequential scan directly.
+        return seq(d, z, R, small, tol)
+
+    cand, pk = jax.vmap(_deflate_candidates)(d, z, small, tol)
+    count = jnp.sum(cand, axis=1).astype(jnp.int32)
+    cmax = jnp.max(count)
+
+    def apply_with(b):
+        return jax.vmap(functools.partial(_deflate_apply, budget=b))(
+            d, z, R, small, tol, pk, cand, count)
+
+    # Budget tiers, picked by the level's max candidate count: the tight
+    # budget for the low-deflation steady state, K/2 for rotation-heavy
+    # levels (glued spectra carry O(K/4) real close pairs at the top
+    # merges), and a full-length K tier that holds EVERY candidate set --
+    # the packed restricted step is cheaper than the sequential carry
+    # step, so even the K tier undercuts the sequential chain and budget
+    # overflow never forces a fallback.  Only a detected missed rotation
+    # (a cascade deeper than the detection's successor hops) does.
+    tiers = [budget]
+    if K // 2 > budget:
+        tiers.append(K // 2)
+    tiers.append(K)
+    index = sum((cmax > t).astype(jnp.int32) for t in tiers[:-1])
+    d1, z1, R1, defl1 = jax.lax.switch(
+        index, [lambda _, b=b: apply_with(b) for b in tiers], None)
+    missed = jax.vmap(_deflate_missed)(d, z, d1, z1, small, tol, pk, cand)
+
+    return jax.lax.cond(
+        jnp.any(missed),
+        lambda ops: seq(*ops),
+        lambda ops: (d1, z1, R1, defl1),
+        (d, z, R, small, tol))
+
+
 DEFAULT_STREAM_THRESHOLD_ACCEL = 512
 
 
@@ -129,15 +333,34 @@ def default_stream_threshold() -> int:
         else DEFAULT_STREAM_THRESHOLD_ACCEL
 
 
-def _merge_prepare(dL, dR, zL, zR, R, rho, sgn, tol_factor):
-    """Per-node merge head: z assembly, pole sort, deflation, compaction.
+DEFAULT_RESIDENT_THRESHOLD_ACCEL = 512
 
-    Everything up to (but excluding) the secular solve -- the part that is
-    inherently per-node (the close-pole Givens chain is a sequential scan
-    over this node's poles).  Returns (d, z, R, kprime, rho_eff) with the
-    active poles sorted ascending in the prefix.
+
+def default_resident_threshold() -> int:
+    """Backend-aware residency threshold for the single-launch merge.
+
+    Merges with K at or below it run the secular solve AND the fused
+    post-pass as ONE dispatch (`ops.secular_merge_resident_batched`): on
+    the Pallas backend that is literally one kernel launch per level with
+    the whole pole/root structure VMEM-resident between the phases, so
+    accelerators default to 512 (a (512, 512) f64 delta tile is ~2 MiB --
+    comfortably resident).  On CPU the executor jit already fuses the two
+    XLA phases into one program and the dense O(K^2) tile is pure memory
+    overhead, so the default is 0 (off); the knob stays available for
+    benchmarking the dispatch-collapse in isolation.
     """
-    K = dL.shape[0] + dR.shape[0]
+    return 0 if jax.default_backend() == "cpu" \
+        else DEFAULT_RESIDENT_THRESHOLD_ACCEL
+
+
+def _merge_assemble(dL, dR, zL, zR, R, rho, sgn, tol_factor):
+    """Per-node merge prelude: z assembly, pole sort, z-small deflation.
+
+    Everything BEFORE the close-pole chain -- all of it elementwise or a
+    single sort, so it stays under the per-node vmap.  Returns
+    (d, z, R, small, tol, rho_eff) with poles sorted ascending and the
+    z-small entries already zeroed.
+    """
     d0 = jnp.concatenate([dL, dR])
     z0 = jnp.concatenate([zL, sgn * zR])
     nrm2 = jnp.sum(z0 * z0)
@@ -156,25 +379,32 @@ def _merge_prepare(dL, dR, zL, zR, R, rho, sgn, tol_factor):
     # ---- type-1 deflation: negligible z entries -------------------------
     small = rho_eff * jnp.abs(z) <= tol
     z = jnp.where(small, 0.0, z)
+    return d, z, R, small, tol, rho_eff
 
-    # ---- type-2 deflation: close poles (sequential Givens chain) --------
-    d, z, R, deflated = _close_pole_scan(d, z, R, small, tol)
-    z = jnp.where(deflated, 0.0, z)
 
-    # ---- compaction: active first (sorted), deflated after --------------
+def _merge_compact(d, z, R, deflated):
+    """Compaction permutation: active poles first (sorted), deflated after.
+
+    Returns (d, z, R, kprime) -- the fixed-shape masked equivalent of
+    DLAED2's dynamic shrink.
+    """
+    K = d.shape[0]
     p2 = jnp.lexsort((d, deflated))
     d = d[p2]
     z = z[p2]
     R = R[:, p2]
     deflated = deflated[p2]
     kprime = (K - jnp.sum(deflated)).astype(jnp.int32)
-    return d, z, R, kprime, rho_eff
+    return d, z, R, kprime
 
 
 def merge_level(lam_pairs, z_inner, R, rho, sgn, *,
-                niter: int = 16, chunk: int = 256, use_zhat: bool = True,
+                niter: int = _sec.DEFAULT_NITER, chunk: int = 256,
+                use_zhat: bool = True,
                 root_mode: bool = False, tol_factor: float = 8.0,
                 stream_threshold: int | None = None,
+                deflate_budget: int = DEFAULT_DEFLATE_BUDGET,
+                resident_threshold: int | None = None,
                 fused: bool = True) -> MergeResult:
     """One tree level of merges: all nodes solved as ONE batched sweep.
 
@@ -184,12 +414,15 @@ def merge_level(lam_pairs, z_inner, R, rho, sgn, *,
     ``problems x nodes`` product, so a whole problem batch shares one
     level launch.
 
-    Execution shape: the per-node head (deflation chain) runs vmapped,
-    then the secular root solve and the fused post-pass run through the
-    *batched* kernel dispatchers (`ops.secular_solve_batched` /
-    `ops.secular_postpass_batched`) -- one launch for the whole level on
-    the Pallas backend (problem-indexed grid axis), a W-wide vectorized
-    sweep on XLA.
+    Execution shape: the per-node prelude (z assembly, sort, z-small
+    test) runs vmapped; the close-pole chain runs through the parallel
+    deflation head (`_deflate_level`: vectorized detection + short exact
+    chain, sequential fallback behind a level-scope cond); then the
+    secular root solve and the fused post-pass run through the *batched*
+    kernel dispatchers -- for K at or below ``resident_threshold`` as ONE
+    resident launch (`ops.secular_merge_resident_batched`), otherwise as
+    the streamed two-launch pair (`ops.secular_solve_batched` +
+    `ops.secular_postpass_batched`).
 
     Args:
       root_mode: skip all row propagation (paper's root-only mode).
@@ -197,6 +430,13 @@ def merge_level(lam_pairs, z_inner, R, rho, sgn, *,
         it run the dense vectorized secular paths (one (W, K, K) tile, no
         streaming loop), larger merges stream in O(chunk * K) tiles per
         node.  None: backend-aware default (see default_stream_threshold).
+      deflate_budget: compacted rotation-candidate budget for the parallel
+        deflation head; <= 0 forces the sequential chain (baseline).
+        Overflow escalates to the exact K/2 / full-K tiers, so this is
+        never a semantics knob.
+      resident_threshold: levels with K at or below it collapse secular
+        solve + post-pass into a single resident dispatch.  None:
+        backend-aware default (see default_resident_threshold).
       fused: single fused delta pass for the post-solve phase (zhat + row
         update share each tile); False keeps the legacy two-pass form for
         benchmarking/regression.
@@ -204,15 +444,32 @@ def merge_level(lam_pairs, z_inner, R, rho, sgn, *,
     K = 2 * lam_pairs.shape[-1]
     if stream_threshold is None:
         stream_threshold = default_stream_threshold()
+    if resident_threshold is None:
+        resident_threshold = default_resident_threshold()
     # fused=False reproduces the pre-fusion pipeline exactly (always
     # streamed, two post-passes) as the benchmark baseline.
     dense = fused and K <= stream_threshold
     dtype = lam_pairs.dtype
 
-    d, z, Rp, kprime, rho_eff = jax.vmap(
-        lambda lp, zi, r_, rh, sg: _merge_prepare(
+    # ---- merge head: prelude (vmapped) + parallel deflation + compaction
+    d, z, Rp, small, tol, rho_eff = jax.vmap(
+        lambda lp, zi, r_, rh, sg: _merge_assemble(
             lp[0], lp[1], zi[0], zi[1], r_, rh, sg, tol_factor)
     )(lam_pairs, z_inner, R, rho, sgn)
+    d, z, Rp, deflated = _deflate_level(d, z, Rp, small, tol,
+                                        budget=deflate_budget)
+    z = jnp.where(deflated, 0.0, z)
+    d, z, Rp, kprime = jax.vmap(_merge_compact)(d, z, Rp, deflated)
+
+    # ---- single-launch resident merge (small K, solve + post-pass) ------
+    if fused and not root_mode and K <= resident_threshold:
+        origin, tau, _, rows = _ops.secular_merge_resident_batched(
+            d, z, Rp, rho_eff, kprime, niter=niter, use_zhat=use_zhat)
+        lam = jnp.take_along_axis(d, origin, axis=1) + tau
+        p3 = jnp.argsort(lam, axis=1)
+        lam = jnp.take_along_axis(lam, p3, axis=1)
+        rows = jnp.take_along_axis(rows, p3[:, None, :], axis=2)
+        return MergeResult(lam.astype(dtype), rows, kprime, rho_eff)
 
     # ---- secular root solve (compact delta representation, batched) -----
     origin, tau = _ops.secular_solve_batched(

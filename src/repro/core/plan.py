@@ -15,7 +15,8 @@ A plan captures everything *static* about a solve up front:
 and owns the process-wide cache of compiled executables, keyed on
 
     (padded N, leaf, batch bucket, dtype, chunk, niter, use_zhat,
-     return_boundary, tol_factor, stream_threshold, fused)
+     return_boundary, tol_factor, stream_threshold, deflate_budget,
+     resident_threshold, fused)
 
 Two requests that differ only in original size n (same padded bucket) or
 only in batch size (same power-of-two bucket) share one executable: the
@@ -24,7 +25,8 @@ padded with trivial dummy problems, both sliced away on exit.  This is
 what lets the solver run as a service under real traffic -- steady-state
 request handling is cache lookups + one device launch, never a retrace.
 
-``stream_threshold=None`` is resolved to the backend-aware concrete value
+``stream_threshold=None``, ``deflate_budget=None`` and
+``resident_threshold=None`` are resolved to backend-aware concrete values
 at plan-construction time so the cache key is always fully concrete.
 
 Memory model: persistent state for a bucket of B problems is B * O(N)
@@ -46,6 +48,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import br_dc as _br
 from repro.core import merge as _merge
+from repro.core import secular as _sec
 from repro.core.instrument import SolveCounter
 
 # Incremented once per executor *trace* (Python-level side effect inside
@@ -66,6 +69,8 @@ class PlanKey(NamedTuple):
     return_boundary: bool
     tol_factor: float
     stream_threshold: int
+    deflate_budget: int
+    resident_threshold: int
     fused: bool
 
 
@@ -135,9 +140,10 @@ def _batch_sharding(bucket: int):
 
 @functools.partial(jax.jit, static_argnames=(
     "leaf", "chunk", "niter", "use_zhat", "return_boundary", "tol_factor",
-    "stream_threshold", "fused"))
+    "stream_threshold", "deflate_budget", "resident_threshold", "fused"))
 def _executor(d_pad, e_pad, track, *, leaf, chunk, niter, use_zhat,
-              return_boundary, tol_factor, stream_threshold, fused):
+              return_boundary, tol_factor, stream_threshold,
+              deflate_budget, resident_threshold, fused):
     """The one compiled entry point for every solve.
 
     A module-level jit (not per-plan) so the executable cache is shared by
@@ -149,7 +155,8 @@ def _executor(d_pad, e_pad, track, *, leaf, chunk, niter, use_zhat,
         d_pad, e_pad, track, leaf=leaf, chunk=chunk, niter=niter,
         use_zhat=use_zhat, return_boundary=return_boundary,
         tol_factor=tol_factor, stream_threshold=stream_threshold,
-        fused=fused)
+        deflate_budget=deflate_budget,
+        resident_threshold=resident_threshold, fused=fused)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,8 +225,24 @@ class SolvePlan:
             d_pad, e_pad, track, leaf=key.leaf, chunk=key.chunk,
             niter=key.niter, use_zhat=key.use_zhat,
             return_boundary=key.return_boundary, tol_factor=key.tol_factor,
-            stream_threshold=key.stream_threshold, fused=key.fused)
+            stream_threshold=key.stream_threshold,
+            deflate_budget=key.deflate_budget,
+            resident_threshold=key.resident_threshold, fused=key.fused)
         _br.SOLVE_COUNTER.increment()
+
+        if _br.SOLVE_COUNTER.deflation_enabled:
+            # Deflation-ratio gauge (opt-in via measure(deflation=True)):
+            # kprime per level is already an executor output, so observing
+            # it costs one tiny host transfer, never a recomputation.
+            # Restrict to merge nodes that touch real data -- nodes lying
+            # entirely in the padded sentinel region [n, N) deflate almost
+            # completely and would bias the reported ratio downwards.
+            for level, kp in enumerate(kprimes):
+                K_level = 2 * key.leaf * (1 << level)
+                nm_real = min(kp.shape[1], -(-n // K_level))
+                _br.SOLVE_COUNTER.record_deflation(
+                    level, float(jnp.sum(kp[:B, :nm_real])),
+                    B * nm_real * K_level)
 
         lam = lam[:B, :n]  # sentinels sort above the Gershgorin bound
         if key.return_boundary:
@@ -237,9 +260,11 @@ _STATS = {"hits": 0, "misses": 0}
 
 
 def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
-              niter: int = 16, use_zhat: bool = True,
+              niter: int = _sec.DEFAULT_NITER, use_zhat: bool = True,
               return_boundary: bool = False, tol_factor: float = 8.0,
-              stream_threshold: int | None = None, fused: bool = True,
+              stream_threshold: int | None = None,
+              deflate_budget: int | None = None,
+              resident_threshold: int | None = None, fused: bool = True,
               dtype=None) -> SolvePlan:
     """Build (or fetch) the SolvePlan for an (n, batch) request class.
 
@@ -255,6 +280,10 @@ def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
         dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
     if stream_threshold is None:
         stream_threshold = _merge.default_stream_threshold()
+    if deflate_budget is None:
+        deflate_budget = _merge.DEFAULT_DEFLATE_BUDGET
+    if resident_threshold is None:
+        resident_threshold = _merge.default_resident_threshold()
     bucket = batch_bucket(batch)
     N, L = _br._tree_shape(n, leaf)
     chunk = _resolve_chunk(chunk, bucket, N)
@@ -262,7 +291,9 @@ def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
                   dtype=jnp.dtype(dtype).name, chunk=chunk, niter=niter,
                   use_zhat=use_zhat, return_boundary=return_boundary,
                   tol_factor=float(tol_factor),
-                  stream_threshold=int(stream_threshold), fused=fused)
+                  stream_threshold=int(stream_threshold),
+                  deflate_budget=int(deflate_budget),
+                  resident_threshold=int(resident_threshold), fused=fused)
     with _PLAN_LOCK:
         plan = _PLAN_CACHE.get(key)
         if plan is not None:

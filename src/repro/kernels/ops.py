@@ -21,11 +21,14 @@ from __future__ import annotations
 import jax
 
 from repro.core import secular as _sec
+from repro.core.secular import DEFAULT_NITER
 from repro.kernels.secular_roots import (secular_solve_pallas,
                                          secular_solve_pallas_batch)
 from repro.kernels.boundary_update import boundary_rows_update_pallas
 from repro.kernels.fused_update import (secular_postpass_pallas,
                                         secular_postpass_pallas_batch)
+from repro.kernels.resident_merge import (resident_merge_pallas,
+                                          resident_merge_pallas_batch)
 from repro.kernels.zhat import zhat_reconstruct_pallas
 
 _BACKEND = "auto"
@@ -49,7 +52,8 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def secular_solve(d, z2, rho, kprime, *, niter: int = 16, chunk: int = 256,
+def secular_solve(d, z2, rho, kprime, *, niter: int = DEFAULT_NITER,
+                  chunk: int = 256,
                   dense: bool = False, backend: str | None = None):
     if dense:
         return _sec.secular_solve(d, z2, rho, kprime, niter=niter,
@@ -75,7 +79,7 @@ def secular_postpass(R, d, z, origin, tau, kprime, rho, *,
                                  use_zhat=use_zhat, chunk=chunk)
 
 
-def secular_solve_batched(d, z2, rho, kprime, *, niter: int = 16,
+def secular_solve_batched(d, z2, rho, kprime, *, niter: int = DEFAULT_NITER,
                           chunk: int = 256, dense: bool = False,
                           backend: str | None = None):
     """Problem-batched secular solve: d, z2 (B, K); rho, kprime (B,).
@@ -114,6 +118,46 @@ def secular_postpass_batched(R, d, z, origin, tau, kprime, rho, *,
                                              interpret=_interpret())
     return _sec.secular_postpass_batched(R, d, z, origin, tau, kprime, rho,
                                          use_zhat=use_zhat, chunk=chunk)
+
+
+def secular_merge_resident(d, z, R, rho, kprime, *,
+                           niter: int = DEFAULT_NITER,
+                           use_zhat: bool = True,
+                           backend: str | None = None):
+    """Single-launch resident merge: solve + fused post-pass in ONE dispatch.
+
+    Returns (origin, tau, zhat, rows); see
+    ``core.secular.secular_merge_resident``.  Pallas backend runs the
+    VMEM-resident kernel (the (origin, tau) never round-trip HBM between
+    the phases); XLA runs the dense fused composition as one traced
+    region.  Callers gate on K <= resident_threshold.
+    """
+    if resolve_backend(backend) == "pallas":
+        return resident_merge_pallas(d, z, R, rho, kprime, niter=niter,
+                                     use_zhat=use_zhat,
+                                     interpret=_interpret())
+    return _sec.secular_merge_resident(d, z, R, rho, kprime, niter=niter,
+                                       use_zhat=use_zhat)
+
+
+def secular_merge_resident_batched(d, z, R, rho, kprime, *,
+                                   niter: int = DEFAULT_NITER,
+                                   use_zhat: bool = True,
+                                   backend: str | None = None):
+    """Problem-batched resident merge: d, z (B, K); R (B, r, K).
+
+    One kernel launch for the whole merge level on the Pallas backend
+    (problems on the grid axis, each fully VMEM-resident); one fused
+    traced region vmapped over problems on XLA.  Returns
+    (origin (B, K) int32, tau (B, K), zhat (B, K), rows (B, r, K)).
+    """
+    if resolve_backend(backend) == "pallas":
+        return resident_merge_pallas_batch(d, z, R, rho, kprime,
+                                           niter=niter, use_zhat=use_zhat,
+                                           interpret=_interpret())
+    return _sec.secular_merge_resident_batched(d, z, R, rho, kprime,
+                                               niter=niter,
+                                               use_zhat=use_zhat)
 
 
 def boundary_rows_update(R, d, z, origin, tau, kprime, *, chunk: int = 256,

@@ -101,6 +101,30 @@ def secular_postpass_batch_ref(R, d, z, origin, tau, kprime, rho, *,
             jnp.stack([o[1] for o in outs]))
 
 
+def resident_merge_ref(d, z, R, rho, kprime, *, use_zhat=True,
+                       niter: int = 100):
+    """Dense oracle for the single-launch resident merge: bisection root
+    solve followed by the dense post-pass -- materializes every
+    intermediate the resident kernel keeps on-chip.  Returns
+    (origin, tau, zhat, rows)."""
+    origin, tau = secular_roots_ref(d, np.asarray(z) ** 2, rho, kprime,
+                                    niter=niter)
+    tau = jnp.asarray(tau, jnp.asarray(d).dtype)
+    zhat, rows = secular_postpass_ref(R, d, z, origin, tau, kprime, rho,
+                                      use_zhat=use_zhat)
+    return origin, tau, zhat, rows
+
+
+def resident_merge_batch_ref(d, z, R, rho, kprime, *, use_zhat=True,
+                             niter: int = 100):
+    """Batched resident-merge oracle: a literal loop of single-problem
+    oracles."""
+    outs = [resident_merge_ref(d[b], z[b], R[b], rho[b], kprime[b],
+                               use_zhat=use_zhat, niter=niter)
+            for b in range(np.asarray(d).shape[0])]
+    return tuple(jnp.stack([o[i] for o in outs]) for i in range(4))
+
+
 def zhat_reconstruct_ref(d, z, origin, tau, kprime, rho):
     """Dense pairwise log-product oracle."""
     K = d.shape[0]

@@ -1,0 +1,258 @@
+"""Pallas TPU kernel: VMEM-resident single-launch merge (solve + post-pass).
+
+For merge levels with K at or below the residency threshold the two-launch
+pipeline (``secular_roots`` kernel, HBM round-trip of (origin, tau), then
+the fused post-pass kernel) is launch- and bandwidth-bound, not
+compute-bound: every one of the root solve's fixed ``niter`` iterations
+re-reads the (K,) pole/weight vectors, and the post-pass then reloads the
+same structure from HBM a second time.  This kernel loads each problem's
+pole/root tile ONCE, runs the full safeguarded middle-way iteration
+on-chip, and flows the converged (origin, tau) straight into the
+Gu-Eisenstat weight reconstruction and the selected-row update -- no HBM
+round-trip between the phases, one kernel launch per merge level.
+
+Grid mapping: one grid step per PROBLEM (the level batch W = B x nodes is
+the major axis of the batched merge tree).  Within a step everything is
+dense: K <= threshold guarantees the (K, K) delta tile fits VMEM
+(~2 MiB at K = 512 f64), which is exactly the residency contract the
+size-adaptive dispatch enforces -- large-K levels keep the streamed
+two-launch path.
+
+Math is identical to ``core.secular.secular_merge_resident`` (the dense
+XLA composition): the DLAED4 middle-way iteration of
+``kernels/secular_roots.py`` followed by the ratio-product DLAED3 post-pass
+of ``kernels/fused_update.py``, specialized to the fully-resident case.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.secular import DEFAULT_NITER
+
+
+def _resident_kernel(d_ref, z_ref, R_ref, rho_ref, kprime_ref,
+                     origin_ref, tau_ref, zhat_ref, rows_ref, *,
+                     niter, use_zhat):
+    K = d_ref.shape[-1]
+    r = R_ref.shape[-2]
+    dtype = d_ref.dtype
+
+    d = d_ref[0]
+    z = z_ref[0]
+    R = R_ref[0]
+    rho = rho_ref[0, 0]
+    kprime = kprime_ref[0, 0]
+    z2 = z * z
+
+    idxK = jax.lax.iota(jnp.int32, K)
+    jc = idxK
+    active_root = jc < kprime
+    is_last = jc == (kprime - 1)
+    active_pole = idxK < kprime
+    zw = jnp.where(active_pole, z2, 0.0)
+    sum_z2 = jnp.sum(zw)
+    span = rho * sum_z2
+
+    # ---- phase 1: dense safeguarded middle-way root solve ---------------
+    d_j = d
+    jnext = jnp.minimum(jc + 1, K - 1)
+    gap_hi = jnp.where(is_last, d_j + span, d[jnext])
+    mid_lam = 0.5 * (d_j + gap_hi)
+
+    def g_at(lam):
+        delta = d[None, :] - lam[:, None]                       # (K, K)
+        ok = active_pole[None, :] & (delta != 0.0)
+        return 1.0 + rho * jnp.sum(
+            jnp.where(ok, zw[None, :] / jnp.where(ok, delta, 1.0), 0.0),
+            axis=-1)
+
+    f_mid = g_at(mid_lam)
+
+    use_left = (f_mid > 0.0) | is_last
+    origin = jnp.where(use_left, jc, jnext)
+    d_org = d[origin]
+    tau_mid = mid_lam - d_org
+
+    lo = jnp.where(use_left, jnp.zeros_like(tau_mid), tau_mid)
+    hi = jnp.where(use_left,
+                   jnp.where(is_last & (f_mid <= 0.0), span, tau_mid),
+                   jnp.zeros_like(tau_mid))
+    lo = jnp.where(is_last & (f_mid <= 0.0), tau_mid, lo)
+
+    n_lo = jnp.where(is_last, jnp.maximum(jc - 1, 0), jc)
+    n_hi = jnp.where(is_last, jc, jnext)
+    p_lo = d[n_lo] - d_org
+    p_hi = d[n_hi] - d_org
+    side_lo = (idxK[None, :] <= n_lo[:, None]) & active_pole[None, :]
+
+    d_shift = d[None, :] - d_org[:, None]                       # (K, K)
+
+    # Initial guess: value-matching 2-pole quadratic at tau_mid.
+    A_lo = rho * z2[n_lo]
+    A_hi = rho * z2[n_hi]
+    c0 = f_mid - A_lo / (p_lo - tau_mid) - A_hi / (p_hi - tau_mid)
+    qb = -(c0 * (p_lo + p_hi) + A_lo + A_hi)
+    qc = c0 * p_lo * p_hi + A_lo * p_hi + A_hi * p_lo
+    sq0 = jnp.sqrt(jnp.maximum(qb * qb - 4.0 * c0 * qc, 0.0))
+    qq0 = -0.5 * (qb + jnp.where(qb >= 0.0, 1.0, -1.0) * sq0)
+    g1 = jnp.where(c0 != 0.0, qq0 / jnp.where(c0 == 0.0, 1.0, c0), jnp.inf)
+    g2 = jnp.where(qq0 != 0.0, qc / jnp.where(qq0 == 0.0, 1.0, qq0), jnp.inf)
+    in1 = jnp.isfinite(g1) & (g1 > lo) & (g1 < hi)
+    in2 = jnp.isfinite(g2) & (g2 > lo) & (g2 < hi)
+    tau0 = jnp.where(in1, g1, jnp.where(in2, g2, 0.5 * (lo + hi)))
+
+    tiny = jnp.finfo(dtype).tiny
+
+    def eval_g(tau):
+        delta = d_shift - tau[:, None]                          # (K, K)
+        ok = active_pole[None, :] & (delta != 0.0)
+        safe = jnp.where(ok, delta, 1.0)
+        terms = jnp.where(ok, zw[None, :] / safe, 0.0)
+        dterms = terms / safe
+        g = 1.0 + rho * jnp.sum(terms, axis=-1)
+        w_lo = rho * jnp.sum(jnp.where(side_lo, dterms, 0.0), axis=-1)
+        w_hi = rho * jnp.sum(jnp.where(side_lo, 0.0, dterms), axis=-1)
+        return g, w_lo, w_hi
+
+    def body(_, state):
+        tau, lo, hi, best_tau, best_g = state
+        g, w_lo, w_hi = eval_g(tau)
+        gp = w_lo + w_hi
+
+        better = jnp.abs(g) < best_g
+        best_tau = jnp.where(better, tau, best_tau)
+        best_g = jnp.where(better, jnp.abs(g), best_g)
+
+        hi = jnp.where(g > 0.0, tau, hi)
+        lo = jnp.where(g <= 0.0, tau, lo)
+
+        D_lo = p_lo - tau
+        D_hi = p_hi - tau
+        Cc = g - D_lo * w_lo - D_hi * w_hi
+        Aa = (D_lo + D_hi) * g - D_lo * D_hi * gp
+        Bb = D_lo * D_hi * g
+        sq = jnp.sqrt(jnp.maximum(Aa * Aa - 4.0 * Bb * Cc, 0.0))
+        eta_neg = (Aa - sq) / jnp.where(Cc == 0.0, 1.0, 2.0 * Cc)
+        eta_pos = 2.0 * Bb / jnp.where(Aa + sq == 0.0, 1.0, Aa + sq)
+        eta = jnp.where(Aa <= 0.0, eta_neg, eta_pos)
+        eta_lin = Bb / jnp.where(Aa == 0.0, 1.0, Aa)
+        newton = -g / jnp.maximum(gp, tiny)
+        eta = jnp.where(Cc == 0.0, jnp.where(Aa != 0.0, eta_lin, newton), eta)
+        eta = jnp.where(g * eta >= 0.0, newton, eta)
+
+        cand = tau + eta
+        inb = jnp.isfinite(cand) & (cand > lo) & (cand < hi)
+        tau_next = jnp.where(inb, cand, 0.5 * (lo + hi))
+        tau_next = jnp.where(g == 0.0, tau, tau_next)
+        return tau_next, lo, hi, best_tau, best_g
+
+    big = jnp.full((K,), jnp.inf, dtype)
+    tau, lo, hi, best_tau, best_g = jax.lax.fori_loop(
+        0, niter, body, (tau0, lo, hi, tau0, big))
+    g_fin, _, _ = eval_g(tau)
+    tau = jnp.where(jnp.abs(g_fin) < best_g, tau, best_tau)
+
+    tau = jnp.where(active_root & (kprime == 1), rho * z2[0], tau)
+    origin = jnp.where(active_root & (kprime == 1), 0, origin)
+    tau = jnp.where(active_root, tau, jnp.zeros_like(tau))
+    origin = jnp.where(active_root, origin, jc)
+
+    origin_ref[0, :] = origin.astype(jnp.int32)
+    tau_ref[0, :] = tau.astype(dtype)
+
+    # ---- phase 2: fused post-pass, (origin, tau) still on-chip ----------
+    # The d_org gather and the (K, K) delta tile are REUSED from the solve
+    # phase's register/VMEM state -- this is the HBM round-trip the
+    # two-launch pipeline pays and this kernel exists to remove.
+    d_org = d[origin]
+    lam_diff = (d_org[None, :] - d[:, None]) + tau[None, :]     # (K_i, K_j)
+    valid_i = active_pole                                       # poles axis
+
+    if use_zhat:
+        pole_diff = d[None, :] - d[:, None]
+        selfmask = idxK[None, :] == idxK[:, None]
+        ok = active_pole[None, :] & ~selfmask
+        ratio = jnp.where(ok, lam_diff / jnp.where(ok, pole_diff, 1.0), 1.0)
+        prod = jnp.prod(ratio, axis=-1)
+        self_term = (d_org - d) + tau                           # lam_i - d_i
+        z2hat = jnp.abs(prod * self_term) / rho
+        zhat = jnp.sign(z) * jnp.sqrt(z2hat)
+        zhat = jnp.where(valid_i, zhat, z).astype(dtype)
+        w = jnp.where(valid_i, zhat, 0.0)
+    else:
+        zhat = z
+        w = jnp.where(valid_i, z, 0.0)
+    zhat_ref[0, :] = zhat
+
+    delta = -lam_diff                         # (d_i - d_org_j) - tau_j
+    ok = valid_i[:, None] & (delta != 0.0)
+    y = jnp.where(ok, w[:, None] / jnp.where(ok, delta, 1.0), 0.0)  # (K, K)
+    cols = jax.lax.dot_general(
+        R, y, (((1,), (0,)), ((), ())), preferred_element_type=dtype)
+    nrm = jnp.sqrt(jnp.sum(y * y, axis=0))
+    cols = cols / jnp.where(nrm > 0.0, nrm, 1.0)[None, :]
+    active_j = active_pole[None, :]
+    rows_ref[0, :, :] = jnp.where(active_j, cols, R).astype(R.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("niter", "use_zhat",
+                                             "interpret"))
+def resident_merge_pallas_batch(d, z, R, rho, kprime, *, niter: int = DEFAULT_NITER,
+                                use_zhat: bool = True,
+                                interpret: bool = False):
+    """Problem-batched single-launch resident merge: grid = (B,).
+
+    d, z: (B, K); R: (B, r, K); rho, kprime: (B,).  Each grid step owns
+    one problem's fully-resident pole/root structure and emits its
+    (origin, tau, zhat, rows) in one pass -- a whole batched merge
+    level's solve + conquer is ONE kernel launch.  Same contract as
+    ``core.secular.secular_merge_resident_batched``.
+
+    Returns (origin (B, K) int32, tau (B, K), zhat (B, K), rows (B, r, K)).
+    """
+    B, r, K = R.shape
+    rho_arr = jnp.asarray(rho, d.dtype).reshape(B, 1)
+    kp_arr = jnp.asarray(kprime, jnp.int32).reshape(B, 1)
+
+    kernel = functools.partial(_resident_kernel, niter=niter,
+                               use_zhat=use_zhat)
+    origin, tau, zhat, rows = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, K), lambda b: (b, 0)),      # d, per problem
+            pl.BlockSpec((1, K), lambda b: (b, 0)),      # z
+            pl.BlockSpec((1, r, K), lambda b: (b, 0, 0)),  # R
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),      # rho
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),      # kprime
+        ],
+        out_specs=[
+            pl.BlockSpec((1, K), lambda b: (b, 0)),
+            pl.BlockSpec((1, K), lambda b: (b, 0)),
+            pl.BlockSpec((1, K), lambda b: (b, 0)),
+            pl.BlockSpec((1, r, K), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K), jnp.int32),
+            jax.ShapeDtypeStruct((B, K), d.dtype),
+            jax.ShapeDtypeStruct((B, K), d.dtype),
+            jax.ShapeDtypeStruct((B, r, K), R.dtype),
+        ],
+        interpret=interpret,
+    )(d, z, R, rho_arr, kp_arr)
+    return origin, tau, zhat, rows
+
+
+def resident_merge_pallas(d, z, R, rho, kprime, *, niter: int = DEFAULT_NITER,
+                          use_zhat: bool = True, interpret: bool = False):
+    """Single-problem view of :func:`resident_merge_pallas_batch`."""
+    origin, tau, zhat, rows = resident_merge_pallas_batch(
+        d[None], z[None], R[None], jnp.asarray(rho, d.dtype)[None],
+        jnp.asarray(kprime, jnp.int32)[None], niter=niter,
+        use_zhat=use_zhat, interpret=interpret)
+    return origin[0], tau[0], zhat[0], rows[0]

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.secular import DEFAULT_NITER
+
 DEFAULT_ROOT_BLOCK = 128
 DEFAULT_POLE_TILE = 1024
 
@@ -195,7 +197,7 @@ def _secular_kernel(d_ref, z2_ref, rho_ref, kprime_ref,
 
 @functools.partial(jax.jit, static_argnames=("niter", "root_block",
                                              "pole_tile", "interpret"))
-def secular_solve_pallas(d, z2, rho, kprime, *, niter: int = 16,
+def secular_solve_pallas(d, z2, rho, kprime, *, niter: int = DEFAULT_NITER,
                          root_block: int = DEFAULT_ROOT_BLOCK,
                          pole_tile: int = DEFAULT_POLE_TILE,
                          interpret: bool = False):
@@ -234,7 +236,7 @@ def secular_solve_pallas(d, z2, rho, kprime, *, niter: int = 16,
 
 @functools.partial(jax.jit, static_argnames=("niter", "root_block",
                                              "pole_tile", "interpret"))
-def secular_solve_pallas_batch(d, z2, rho, kprime, *, niter: int = 16,
+def secular_solve_pallas_batch(d, z2, rho, kprime, *, niter: int = DEFAULT_NITER,
                                root_block: int = DEFAULT_ROOT_BLOCK,
                                pole_tile: int = DEFAULT_POLE_TILE,
                                interpret: bool = False):

@@ -1,0 +1,176 @@
+"""Deflation-heavy merge coverage: the parallel deflation head.
+
+  * glued-Wilkinson family (the canonical deflation-heavy D&C stress
+    input) solved with the parallel detect-compact-apply head vs the
+    exact sequential chain (``deflate_budget=0``): eigenvalues within
+    8 * eps * ||T||, identical per-level kprime, on single AND batched
+    (B, n) paths;
+  * low-deflation families: the two paths are bit-identical (no
+    rotations fire, so the restricted chain is a provable no-op of the
+    sequential one);
+  * budget-overflow tier escalation: a budget of 1 overflows on every
+    deflation-heavy merge and must escalate to the K/2 / full-K tiers
+    without changing results; a detected missed cascade (forced) must
+    take the sequential fallback bit-exactly;
+  * the deflation-ratio gauge: per-level kprime/K observed inside
+    ``measure(deflation=True)`` windows, nothing recorded otherwise.
+"""
+
+import numpy as np
+import pytest
+import scipy.linalg as sla
+
+from repro.core import br_dc
+from repro.core import (eigvalsh_tridiagonal_batch, eigvalsh_tridiagonal_br,
+                        make_family, make_family_batch)
+
+pytestmark = pytest.mark.deflation
+
+
+def _tnorm(d, e):
+    return float(np.max(np.abs(d)) + 2.0 * np.max(np.abs(e)))
+
+
+@pytest.mark.parametrize("mat", ["glued_wilkinson", "toeplitz"])
+@pytest.mark.parametrize("n", [96, 200, 320])
+def test_parallel_head_matches_sequential_chain(mat, n):
+    """Parallel head vs sequential chain: same rotations, same kprime,
+    eigenvalues to within 8 * eps * ||T|| (identical up to the
+    compiler's per-program FMA contraction in the rotation updates)."""
+    d, e = make_family(mat, n)
+    r_par = eigvalsh_tridiagonal_br(d, e, leaf=8, return_boundary=True)
+    r_seq = eigvalsh_tridiagonal_br(d, e, leaf=8, return_boundary=True,
+                                    deflate_budget=0)
+    tol = 8 * np.finfo(np.float64).eps * _tnorm(d, e)
+    np.testing.assert_allclose(np.asarray(r_par.eigenvalues),
+                               np.asarray(r_seq.eigenvalues),
+                               rtol=0, atol=tol)
+    if mat == "toeplitz":
+        # Entrywise boundary-row comparison is only well-posed away from
+        # eigenvalue clusters (glued-Wilkinson's 1e-8-wide clusters let
+        # eigenvector entries rotate freely under one-ulp pole changes).
+        np.testing.assert_allclose(np.asarray(r_par.bhi),
+                                   np.asarray(r_seq.bhi),
+                                   rtol=0, atol=1e-12)
+    assert abs(np.linalg.norm(np.asarray(r_par.bhi)) - 1.0) < 1e-9
+    for kp, ks in zip(r_par.kprime_per_level, r_seq.kprime_per_level):
+        np.testing.assert_array_equal(np.asarray(kp), np.asarray(ks))
+
+
+@pytest.mark.parametrize("mat", ["glued_wilkinson", "toeplitz"])
+def test_parallel_head_matches_lapack(mat):
+    """The parallel head must not cost accuracy against LAPACK through
+    the whole tree (glued-Wilkinson resolves to its 1e-8 cluster width,
+    as any D&C does)."""
+    n = 200
+    d, e = make_family(mat, n)
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    got = eigvalsh_tridiagonal_br(d, e, leaf=8).eigenvalues
+    scale = max(1.0, np.max(np.abs(ref)))
+    tol = 5e-13 if mat == "toeplitz" else 1e-7
+    assert np.max(np.abs(np.asarray(got) - ref)) / scale < tol
+
+
+@pytest.mark.parametrize("family", ["normal", "uniform", "clustered"])
+def test_low_deflation_bit_identical(family):
+    """On low-deflation families no rotation fires, so the parallel head
+    and the overflow-fallback (sequential) path must agree BIT-exactly --
+    batched, through the full tree."""
+    D, E = make_family_batch(family, 200, 3)
+    r_par = eigvalsh_tridiagonal_batch(D, E, leaf=8, return_boundary=True)
+    r_seq = eigvalsh_tridiagonal_batch(D, E, leaf=8, return_boundary=True,
+                                       deflate_budget=0)
+    np.testing.assert_array_equal(np.asarray(r_par.eigenvalues),
+                                  np.asarray(r_seq.eigenvalues))
+    np.testing.assert_array_equal(np.asarray(r_par.bhi),
+                                  np.asarray(r_seq.bhi))
+
+
+@pytest.mark.parametrize("n", [160, 256])
+def test_batched_glued_matches_sequential(n):
+    """Batched (B, n) glued-Wilkinson path: parallel head vs sequential
+    chain per problem, plus identical per-level kprime diagnostics."""
+    D, E = make_family_batch("glued_wilkinson", n, 4)
+    r_par = eigvalsh_tridiagonal_batch(D, E, leaf=8)
+    r_seq = eigvalsh_tridiagonal_batch(D, E, leaf=8, deflate_budget=0)
+    tol = 8 * np.finfo(np.float64).eps * max(
+        _tnorm(D[b], E[b]) for b in range(D.shape[0]))
+    np.testing.assert_allclose(np.asarray(r_par.eigenvalues),
+                               np.asarray(r_seq.eigenvalues),
+                               rtol=0, atol=tol)
+    for kp, ks in zip(r_par.kprime_per_level, r_seq.kprime_per_level):
+        np.testing.assert_array_equal(np.asarray(kp), np.asarray(ks))
+
+
+def test_budget_overflow_escalates_tiers_exactly():
+    """deflate_budget=1 overflows on every deflation-heavy merge (tens of
+    rotation candidates per node) -> the level must escalate to the K/2
+    or full-K tier and still match the sequential baseline (same
+    rotations, identical kprime, eigenvalues within the rotation
+    arithmetic's FMA-contraction ulp)."""
+    d, e = make_family("glued_wilkinson", 200)
+    r_tiny = eigvalsh_tridiagonal_br(d, e, leaf=8, deflate_budget=1)
+    r_seq = eigvalsh_tridiagonal_br(d, e, leaf=8, deflate_budget=0)
+    tol = 8 * np.finfo(np.float64).eps * _tnorm(d, e)
+    np.testing.assert_allclose(np.asarray(r_tiny.eigenvalues),
+                               np.asarray(r_seq.eigenvalues),
+                               rtol=0, atol=tol)
+    for kp, ks in zip(r_tiny.kprime_per_level, r_seq.kprime_per_level):
+        np.testing.assert_array_equal(np.asarray(kp), np.asarray(ks))
+
+
+def test_missed_cascade_falls_back_to_sequential(monkeypatch):
+    """The sequential fallback fires on a detected missed rotation; force
+    the detector to report a miss and pin that the level output is the
+    sequential chain's, bit for bit."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import merge as M
+
+    rng = np.random.default_rng(0)
+    W, K = 3, 64
+    d = jnp.asarray(np.sort(rng.standard_normal((W, K)), axis=1))
+    z = rng.standard_normal((W, K))
+    z /= np.linalg.norm(z, axis=1, keepdims=True)
+    z = jnp.asarray(z)
+    tol = jnp.full((W,), 1e-12)
+    small = jnp.zeros((W, K), bool)
+    R = jnp.asarray(rng.standard_normal((W, 2, K)))
+
+    want = jax.vmap(M._close_pole_scan)(d, z, R, small, tol)
+    monkeypatch.setattr(
+        M, "_deflate_missed",
+        lambda d0, z0, d1, z1, small, tol, pk, cand: jnp.any(d0 == d0))
+    got = M._deflate_level(d, z, R, small, tol, budget=8)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_huge_budget_degrades_to_sequential():
+    """A budget >= K cannot shorten the chain; the dispatch must fall
+    through to the sequential scan (still exact, no cond overhead)."""
+    d, e = make_family("glued_wilkinson", 96)
+    r_big = eigvalsh_tridiagonal_br(d, e, leaf=8, deflate_budget=1 << 20)
+    r_seq = eigvalsh_tridiagonal_br(d, e, leaf=8, deflate_budget=0)
+    np.testing.assert_array_equal(np.asarray(r_big.eigenvalues),
+                                  np.asarray(r_seq.eigenvalues))
+
+
+def test_deflation_gauge_observes_ratios():
+    """measure(deflation=True) exposes per-level kprime/K; a plain
+    window records nothing and costs nothing."""
+    d, e = make_family("glued_wilkinson", 256)
+    with br_dc.SOLVE_COUNTER.measure(deflation=True) as w:
+        eigvalsh_tridiagonal_br(d, e, leaf=16)
+    ratios = w.deflation_ratios
+    assert ratios, "gauge window recorded no levels"
+    assert set(ratios) == set(range(len(ratios)))   # contiguous levels
+    assert all(0.0 < r <= 1.0 for r in ratios.values())
+    # glued-Wilkinson deflates heavily above the leaves: the top level
+    # must keep well under the full secular rank.
+    assert ratios[max(ratios)] < 0.9
+
+    with br_dc.SOLVE_COUNTER.measure() as w2:
+        eigvalsh_tridiagonal_br(d, e, leaf=16)
+    assert w2.deflation_ratios == {}
+    assert w2.count == 1

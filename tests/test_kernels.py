@@ -15,6 +15,8 @@ from repro.kernels import ref
 from repro.kernels.secular_roots import secular_solve_pallas
 from repro.kernels.boundary_update import boundary_rows_update_pallas
 from repro.kernels.fused_update import secular_postpass_pallas
+from repro.kernels.resident_merge import (resident_merge_pallas,
+                                          resident_merge_pallas_batch)
 from repro.kernels.zhat import zhat_reconstruct_pallas
 
 
@@ -154,6 +156,119 @@ def test_fused_postpass_kernel_vs_xla_fused(K, kprime):
                                atol=1e-12, rtol=1e-10)
     np.testing.assert_allclose(np.asarray(rows_p), np.asarray(rows_x),
                                atol=1e-12, rtol=1e-10)
+
+
+@pytest.mark.parametrize("K,kprime", [(32, 17), (64, 64), (130, 101)])
+def test_resident_merge_kernel_vs_oracle(K, kprime):
+    """The single-launch resident kernel == bisection root solve followed
+    by the dense post-pass (every intermediate it keeps on-chip)."""
+    rng = np.random.default_rng(9)
+    d, z, rho = _problem(K, kprime, seed=9)
+    R = jnp.asarray(rng.standard_normal((2, K)))
+    o_p, t_p, zh_p, rows_p = resident_merge_pallas(
+        d, z, R, jnp.asarray(rho, d.dtype), jnp.asarray(kprime),
+        niter=24, interpret=True)
+    o_r, t_r, zh_r, rows_r = ref.resident_merge_ref(d, z, R, rho, kprime)
+    lam_p = np.sort(np.asarray(d)[np.asarray(o_p)[:kprime]]
+                    + np.asarray(t_p)[:kprime])
+    lam_r = np.sort(np.asarray(d)[np.asarray(o_r)[:kprime]]
+                    + np.asarray(t_r)[:kprime])
+    np.testing.assert_allclose(lam_p, lam_r, atol=1e-9, rtol=1e-10)
+    np.testing.assert_allclose(np.asarray(zh_p), np.asarray(zh_r),
+                               atol=1e-8, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(rows_p), np.asarray(rows_r),
+                               atol=1e-8, rtol=1e-6)
+
+
+@pytest.mark.parametrize("K,kprime", [(32, 17), (64, 64), (130, 101)])
+def test_resident_merge_kernel_vs_xla_resident(K, kprime):
+    """Pallas resident kernel vs the fused dense XLA composition (same
+    algorithm end to end) -- agreement to near machine precision."""
+    rng = np.random.default_rng(10)
+    d, z, rho = _problem(K, kprime, seed=10)
+    R = jnp.asarray(rng.standard_normal((3, K)))
+    o_p, t_p, zh_p, rows_p = resident_merge_pallas(
+        d, z, R, jnp.asarray(rho, d.dtype), jnp.asarray(kprime),
+        interpret=True)
+    o_x, t_x, zh_x, rows_x = sec.secular_merge_resident(d, z, R, rho, kprime)
+    lam_p = np.asarray(d)[np.asarray(o_p)] + np.asarray(t_p)
+    lam_x = np.asarray(d)[np.asarray(o_x)] + np.asarray(t_x)
+    np.testing.assert_allclose(lam_p, lam_x, atol=1e-13, rtol=0)
+    np.testing.assert_allclose(np.asarray(zh_p), np.asarray(zh_x),
+                               atol=1e-12, rtol=1e-10)
+    np.testing.assert_allclose(np.asarray(rows_p), np.asarray(rows_x),
+                               atol=1e-12, rtol=1e-10)
+
+
+def test_resident_merge_xla_matches_two_launch():
+    """The XLA resident composition is EXACTLY the dense two-launch
+    pipeline (same functions, one traced region): dispatch collapse is a
+    launch-count knob, never a semantics knob."""
+    d, z, rho = _problem(64, 50, seed=11)
+    R = jnp.asarray(np.random.default_rng(11).standard_normal((2, 64)))
+    o1, t1, zh1, rows1 = sec.secular_merge_resident(d, z, R, rho, 50)
+    o2, t2 = sec.secular_solve(d, z * z, rho, 50, dense=True)
+    zh2, rows2 = sec.secular_postpass(R, d, z, o2, t2, 50, rho, dense=True)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(zh1), np.asarray(zh2))
+    np.testing.assert_array_equal(np.asarray(rows1), np.asarray(rows2))
+
+
+def test_resident_merge_batch_kernel():
+    """Batched resident kernel (problems on the grid axis) vs a loop of
+    single-problem kernel calls and vs the batched oracle."""
+    B, K = 3, 48
+    rng = np.random.default_rng(12)
+    ds, zs, kps = [], [], []
+    for b in range(B):
+        kp = (8, 48, 31)[b]
+        d, z, _ = _problem(K, kp, seed=20 + b)
+        ds.append(d); zs.append(z); kps.append(kp)
+    d = jnp.stack(ds); z = jnp.stack(zs)
+    kprime = jnp.asarray(kps, jnp.int32)
+    rho = jnp.asarray([0.7, 1.3, 0.2], d.dtype)
+    R = jnp.asarray(rng.standard_normal((B, 2, K)))
+
+    o_b, t_b, zh_b, rows_b = resident_merge_pallas_batch(
+        d, z, R, rho, kprime, interpret=True)
+    for b in range(B):
+        o_s, t_s, zh_s, rows_s = resident_merge_pallas(
+            d[b], z[b], R[b], rho[b], kprime[b], interpret=True)
+        np.testing.assert_array_equal(np.asarray(o_b[b]), np.asarray(o_s))
+        np.testing.assert_array_equal(np.asarray(t_b[b]), np.asarray(t_s))
+        np.testing.assert_array_equal(np.asarray(zh_b[b]), np.asarray(zh_s))
+        np.testing.assert_array_equal(np.asarray(rows_b[b]),
+                                      np.asarray(rows_s))
+    o_r, t_r, zh_r, rows_r = ref.resident_merge_batch_ref(
+        d, z, R, np.asarray(rho), np.asarray(kprime))
+    for b in range(B):
+        kp = kps[b]
+        lam_b = np.sort(np.asarray(d[b])[np.asarray(o_b[b])[:kp]]
+                        + np.asarray(t_b[b])[:kp])
+        lam_r = np.sort(np.asarray(d[b])[np.asarray(o_r[b])[:kp]]
+                        + np.asarray(t_r[b])[:kp])
+        np.testing.assert_allclose(lam_b, lam_r, atol=1e-9, rtol=1e-9)
+    np.testing.assert_allclose(np.asarray(rows_b), np.asarray(rows_r),
+                               atol=1e-8, rtol=1e-6)
+
+
+def test_solver_resident_threshold_is_dispatch_knob_only():
+    """Full solver with every level under the residency threshold vs the
+    streamed two-launch pipeline: identical spectra and boundary rows."""
+    from repro.core import eigvalsh_tridiagonal_br, make_family
+    d, e = make_family("normal", 200)
+    r_res = eigvalsh_tridiagonal_br(d, e, leaf=8, return_boundary=True,
+                                    resident_threshold=1 << 20,
+                                    stream_threshold=1 << 20)
+    r_two = eigvalsh_tridiagonal_br(d, e, leaf=8, return_boundary=True,
+                                    resident_threshold=0,
+                                    stream_threshold=1 << 20)
+    np.testing.assert_allclose(np.asarray(r_res.eigenvalues),
+                               np.asarray(r_two.eigenvalues),
+                               rtol=0, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(r_res.bhi), np.asarray(r_two.bhi),
+                               rtol=0, atol=1e-10)
 
 
 def test_zhat_improves_or_matches_weights():
