@@ -1,0 +1,79 @@
+"""Partial-spectrum sweep: sliced Sturm-bisection solves vs the full conquer.
+
+The reason eigenvalue-only solvers win biggest in practice (Keyes et al.,
+PAPERS.md) is that real workloads rarely need all n eigenvalues; this
+suite measures the library's spectrum-slicing front end against the full
+BR solve at the same accuracy contract.  Rows:
+
+    partial_k{k}_n{n}       -- eigvalsh_tridiagonal_range, top-k slice
+                               (derived carries full/partial = the slicing
+                               speedup; the acceptance bar is >= 3x for
+                               k=32 at n=4096 on CPU)
+    full_n{n}               -- the full BR conquer at the same n
+    partial_band_n{n}       -- select-by-value band around the spectrum
+                               median (the condition-estimation shape)
+    sturm_sweep_n{n}        -- one batched Sturm-count sweep in isolation
+                               (the bisection front's per-iteration cost)
+
+Emit machine-readable results with
+
+    PYTHONPATH=src python -m benchmarks.run --only partial --json BENCH_partial.json
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import time_call, time_pair
+from repro.core import (eigvalsh_tridiagonal_br, eigvalsh_tridiagonal_range,
+                        make_family, sturm_count)
+
+
+def run(report, *, quick=False):
+    sizes = (1024,) if quick else (1024, 4096)
+    ks = (8, 32) if quick else (8, 32, 128)
+    for n in sizes:
+        d, e = make_family("uniform", n)
+
+        def full():
+            return eigvalsh_tridiagonal_br(d, e).eigenvalues
+
+        t_full = time_call(full)
+        report(f"full_n{n}", t_full, "")
+
+        for k in ks:
+            def partial(k=k):
+                return eigvalsh_tridiagonal_range(
+                    d, e, select="i", il=n - k, iu=n - 1)
+
+            t_partial, t_full_i = time_pair(partial, full, iters=5)
+            report(f"partial_k{k}_n{n}", t_partial,
+                   f"full/partial={t_full_i / t_partial:.2f}x")
+
+        # Select-by-value band: ~32 eigenvalues around the spectrum
+        # median (two host-side Sturm counts + one sliced solve -- the
+        # condition-estimation shape).  Window edges derived from the
+        # full solve so the row keeps its meaning for any family/size.
+        lam_full = np.asarray(full())
+        vl = float(lam_full[n // 2 - 16]) + 1e-12
+        vu = float(lam_full[n // 2 + 16]) + 1e-12
+
+        def band():
+            return eigvalsh_tridiagonal_range(d, e, select="v",
+                                              vl=vl, vu=vu)
+
+        nb = int(np.asarray(band()).shape[0])
+        t_band = time_call(band, iters=5)
+        report(f"partial_band_n{n}", t_band, f"hits={nb}")
+
+        # One Sturm sweep in isolation: the per-iteration cost the whole
+        # bisection front is built from (64 probe shifts).
+        shifts = jnp.linspace(float(lam_full[0]) - 1.0,
+                              float(lam_full[-1]) + 1.0, 64)
+
+        def sweep():
+            return sturm_count(d, e, shifts)
+
+        t_sweep = time_call(sweep, iters=5)
+        report(f"sturm_sweep_n{n}", t_sweep, "shifts=64")

@@ -49,9 +49,9 @@ def main(argv=None) -> None:
     jax.config.update("jax_enable_x64", True)
 
     from benchmarks import (bench_accuracy, bench_batched, bench_fused,
-                            bench_kernels, bench_merge, bench_scaling,
-                            bench_vs_lazy, bench_vs_sterf, bench_workspace,
-                            roofline)
+                            bench_kernels, bench_merge, bench_partial,
+                            bench_scaling, bench_vs_lazy, bench_vs_sterf,
+                            bench_workspace, roofline)
 
     rows = []
     records = []
@@ -83,6 +83,7 @@ def main(argv=None) -> None:
         "fused": lambda: bench_fused.run(
             report, sizes=(512, 1024) if args.quick else (1024, 2048, 4096)),
         "merge": lambda: bench_merge.run(report, quick=args.quick),
+        "partial": lambda: bench_partial.run(report, quick=args.quick),
         "roofline": lambda: roofline.run(report),
     }
 

@@ -10,7 +10,8 @@ import numpy as np
 import scipy.linalg as sla
 
 from repro.core import (eigvalsh_tridiagonal, eigvalsh_tridiagonal_br,
-                        make_family, workspace_model, workspace_model_lazy)
+                        eigvalsh_tridiagonal_range, make_family,
+                        workspace_model, workspace_model_lazy)
 
 
 def main():
@@ -29,6 +30,11 @@ def main():
         lam_m = eigvalsh_tridiagonal(d, e, method=method)
         err_m = np.max(np.abs(np.asarray(lam_m) - ref))
         print(f"  method={method:6s} max|diff vs ref| = {err_m:.2e}")
+
+    # --- partial spectrum: k << n eigenvalues by index or value window ----
+    top8 = eigvalsh_tridiagonal_range(d, e, select="i", il=n - 8, iu=n - 1)
+    err_p = np.max(np.abs(np.asarray(top8) - ref[n - 8:]))
+    print(f"top-8 slice (Sturm bisection): max|diff vs ref| = {err_p:.2e}")
 
     # --- boundary rows: the O(n) state that replaces dense eigenvectors ---
     res = eigvalsh_tridiagonal_br(d, e, return_boundary=True)

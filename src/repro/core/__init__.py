@@ -6,6 +6,7 @@ against, all sharing one merge core so exact-arithmetic equivalence
 """
 
 from repro.core.api import eigvalsh_tridiagonal, METHODS
+from repro.core.bisect import eigvalsh_tridiagonal_range, sturm_count
 from repro.core.br_dc import (
     BRBatchResult,
     BRResult,
@@ -15,16 +16,20 @@ from repro.core.br_dc import (
     workspace_model,
 )
 from repro.core.plan import (
+    RangePlan,
     SolvePlan,
     clear_plan_cache,
     make_plan,
+    make_range_plan,
     plan_cache_stats,
 )
 from repro.core.sterf import eigvalsh_tridiagonal_sterf
 from repro.core.baselines import (
     eig_tridiagonal_full_dc,
+    eigvalsh_tridiagonal_bisect,
     eigvalsh_tridiagonal_full_discard,
     eigvalsh_tridiagonal_lazy,
+    workspace_model_bisect,
     workspace_model_full,
     workspace_model_lazy,
     workspace_model_sterf,
@@ -44,16 +49,20 @@ from repro.core.tridiag import (
 )
 
 __all__ = [
-    "BRBatchResult", "BRResult", "FAMILIES", "METHODS", "SOLVE_COUNTER",
+    "BRBatchResult", "BRResult", "FAMILIES", "METHODS", "RangePlan",
+    "SOLVE_COUNTER",
     "SolvePlan", "boundary_rows_update", "clear_plan_cache",
     "dense_from_tridiag",
     "eig_tridiagonal_full_dc", "eigvalsh_tridiagonal",
-    "eigvalsh_tridiagonal_batch", "eigvalsh_tridiagonal_br",
+    "eigvalsh_tridiagonal_batch", "eigvalsh_tridiagonal_bisect",
+    "eigvalsh_tridiagonal_br",
     "eigvalsh_tridiagonal_full_discard",
-    "eigvalsh_tridiagonal_lazy", "eigvalsh_tridiagonal_sterf",
+    "eigvalsh_tridiagonal_lazy", "eigvalsh_tridiagonal_range",
+    "eigvalsh_tridiagonal_sterf",
     "gershgorin_bounds", "make_family", "make_family_batch",
-    "make_plan", "plan_cache_stats",
+    "make_plan", "make_range_plan", "plan_cache_stats",
     "secular_eigenvalues",
-    "secular_solve", "workspace_model", "workspace_model_full",
+    "secular_solve", "sturm_count", "workspace_model",
+    "workspace_model_bisect", "workspace_model_full",
     "workspace_model_lazy", "workspace_model_sterf", "zhat_reconstruct",
 ]

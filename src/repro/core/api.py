@@ -5,6 +5,13 @@
     lam = eigvalsh_tridiagonal(d, e, method="sterf")    # QR/QL baseline
     lam = eigvalsh_tridiagonal(d, e, method="lazy")     # internal values-only D&C
     lam = eigvalsh_tridiagonal(d, e, method="full")     # conventional D&C (discard Q)
+    lam = eigvalsh_tridiagonal(d, e, method="bisect")   # Sturm bisection reference
+
+Partial spectrum (k << n eigenvalues by index or value window):
+
+    from repro.core import eigvalsh_tridiagonal_range
+    top = eigvalsh_tridiagonal_range(d, e, select="i", il=n - 32, iu=n - 1)
+    band = eigvalsh_tridiagonal_range(d, e, select="v", vl=0.0, vu=2.5)
 
 Batched front door (one device solve for B problems, B * O(n) state):
 
@@ -14,21 +21,23 @@ Batched front door (one device solve for B problems, B * O(n) state):
 
 ``eigvalsh_tridiagonal`` itself also accepts stacked (B, n) inputs and
 routes them per method: "br" runs natively batched through the
-plan/executor core (one launch, bucketed compile cache); the baselines
-(which exist to model per-problem quadratic state) fall back to a loop
-of single solves and return the stacked (B, n) spectra.
+plan/executor core (one launch, bucketed compile cache) and "bisect"
+through the batched range executor; the baselines (which exist to model
+per-problem quadratic state) fall back to a loop of single solves and
+return the stacked (B, n) spectra.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.bisect import eigvalsh_tridiagonal_range
 from repro.core.br_dc import (eigvalsh_tridiagonal_batch,
                               eigvalsh_tridiagonal_br)
 from repro.core.sterf import eigvalsh_tridiagonal_sterf
 from repro.core import baselines as _bl
 
-METHODS = ("br", "sterf", "lazy", "full", "eigh")
+METHODS = ("br", "sterf", "lazy", "full", "eigh", "bisect")
 
 
 def _solve_single(d, e, method, kw):
@@ -43,6 +52,8 @@ def _solve_single(d, e, method, kw):
     if method == "eigh":
         from repro.core.tridiag import dense_from_tridiag
         return jnp.linalg.eigvalsh(dense_from_tridiag(d, e))
+    if method == "bisect":
+        return _bl.eigvalsh_tridiagonal_bisect(d, e, **kw)
     raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
 
 
@@ -51,14 +62,20 @@ def eigvalsh_tridiagonal(d, e, method: str = "br", **kw):
 
     1-D inputs solve one problem and return (n,); stacked (B, n) /
     (B, n-1) inputs solve the batch and return (B, n) -- natively for
-    "br" (one device solve via the plan/executor core), looped for the
-    baseline methods.
+    "br" (one device solve via the plan/executor core) and "bisect"
+    (one sliced solve over all indices), looped for the baseline
+    methods.
     """
     d = jnp.asarray(d)
     e = jnp.asarray(e)
     if d.ndim == 2:
         if method == "br":
             return eigvalsh_tridiagonal_batch(d, e, **kw).eigenvalues
+        if method == "bisect":
+            # Natively batched: one sliced solve covering all n indices.
+            n = d.shape[1]
+            return eigvalsh_tridiagonal_range(d, e, select="i", il=0,
+                                              iu=n - 1, **kw)
         if method not in METHODS:
             raise ValueError(
                 f"unknown method {method!r}; choose from {METHODS}")

@@ -213,6 +213,34 @@ def eigvalsh_tridiagonal_lazy(d, e, *, leaf: int = 32, chunk: int = 128,
 
 
 # ---------------------------------------------------------------------------
+# Sturm bisection full-spectrum reference (linear workspace, O(n^2) work)
+# ---------------------------------------------------------------------------
+
+def eigvalsh_tridiagonal_bisect(d, e, *, maxiter: int | None = None,
+                                polish: int | None = None, dtype=None):
+    """All eigenvalues via Sturm-count bisection (DSTEBZ-style reference).
+
+    The full-spectrum degenerate case of the partial-spectrum front end
+    (``repro.core.bisect``): every index bracketed by Gershgorin bounds
+    and refined in one all-intervals-in-parallel bisection.  O(n + k)
+    workspace like BR but O(n^2 log eps) work -- it exists as an
+    algorithmically independent cross-check (no merge tree, no secular
+    equation, no deflation), which is what makes it valuable to the
+    conformance suite.
+    """
+    from repro.core.bisect import eigvalsh_tridiagonal_range
+    d = jnp.asarray(d)
+    n = d.shape[-1]
+    kw = {}
+    if maxiter is not None:
+        kw["maxiter"] = maxiter
+    if polish is not None:
+        kw["polish"] = polish
+    return eigvalsh_tridiagonal_range(d, e, select="i", il=0, iu=n - 1,
+                                      dtype=dtype, **kw)
+
+
+# ---------------------------------------------------------------------------
 # Workspace models (paper Table 1 / Section 5.3 accounting)
 # ---------------------------------------------------------------------------
 
@@ -238,3 +266,17 @@ def workspace_model_full(n: int, leaf: int = 32, itemsize: int = 8) -> dict:
 
 def workspace_model_sterf(n: int, itemsize: int = 8) -> dict:
     return {"persistent_bytes": 2 * n * itemsize, "model": "d,e arrays only"}
+
+
+def workspace_model_bisect(n: int, k: int | None = None, batch: int = 1,
+                           itemsize: int = 8) -> dict:
+    """Spectrum slicing: d, e^2 inputs + 3k bracket/pivot lanes per problem.
+
+    No merge tree and no selected rows -- the entire state of a k-slice
+    solve is the input pair plus (lo, hi, mid) per requested root, so a
+    top-32 slice of n = 4096 carries ~2n + 3k floats per problem.
+    """
+    k = n if k is None else k
+    per_problem = 2 * n + 3 * k
+    return {"persistent_bytes": batch * per_problem * itemsize,
+            "model": f"B*(2n + 3k) floats, n={n}, k={k}, B={batch}"}

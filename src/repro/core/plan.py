@@ -56,6 +56,9 @@ from repro.core.instrument import SolveCounter
 # that a second same-bucket request performs zero new traces.
 EXECUTOR_TRACES = SolveCounter("executor_traces")
 
+# Same contract for the partial-spectrum (range) executor.
+RANGE_EXECUTOR_TRACES = SolveCounter("range_executor_traces")
+
 
 class PlanKey(NamedTuple):
     """Bucketed compile-cache key; every field is static/hashable."""
@@ -254,9 +257,96 @@ class SolvePlan:
                                  tuple(k[:B] for k in kprimes))
 
 
+class RangePlanKey(NamedTuple):
+    """Bucketed cache key for partial-spectrum (sliced) solves.
+
+    ``k_bucket`` rounds the requested slice width up to the next power of
+    two and the target *indices* are a traced executor input, so every
+    (il, iu) window of the same bucketed width -- top-k, bottom-k, or an
+    interior band -- shares one executable.  ``select`` is deliberately
+    NOT a key field: select-by-value requests are resolved host-side to
+    an index window (two Sturm counts) and then reuse the select-by-index
+    executables instead of splitting the cache.
+    """
+    n: int
+    k_bucket: int
+    batch_bucket: int
+    dtype: str
+    maxiter: int
+    polish: int
+
+
+@functools.partial(jax.jit, static_argnames=("maxiter", "polish"))
+def _range_executor(d, e, targets, *, maxiter, polish):
+    """The one compiled entry point for every sliced solve.
+
+    Module-level jit (not per-plan) so executables are shared across
+    RangePlan instances exactly like the full-spectrum ``_executor``.
+    """
+    from repro.core import bisect as _bis  # deferred: bisect imports plan
+    RANGE_EXECUTOR_TRACES.increment()
+    return _bis._slice_targets(d, e, targets, maxiter=maxiter,
+                               polish=polish)
+
+
+@dataclasses.dataclass(frozen=True)
+class RangePlan:
+    """Static schedule for one (n, k bucket, batch bucket) sliced-solve
+    class; ``execute`` is the only entry point that launches work."""
+    key: RangePlanKey
+
+    @property
+    def k_bucket_size(self) -> int:
+        return self.key.k_bucket
+
+    def execute(self, d, e, il: int, k: int | None = None):
+        """Eigenvalues [il, il + k) of each problem in a (B, n) batch.
+
+        B may be anything <= the plan's batch bucket; the slice may start
+        anywhere and k may be anything <= the plan's k bucket (targets
+        are traced inputs).  Short batches pad with trivial dummy
+        problems and short slices pad by clamping the target indices to
+        n-1 (duplicate roots, sliced away).  Exactly one device launch.
+        Returns (B, k).
+        """
+        key = self.key
+        dtype = jnp.dtype(key.dtype)
+        d = jnp.asarray(d, dtype)
+        e = jnp.asarray(e, dtype)
+        d, e = _br._as_batch(d, e, None)
+        B, n = d.shape
+        if n != key.n:
+            raise ValueError(f"n={n} but this plan was built for n={key.n}")
+        Bb = key.batch_bucket
+        if B > Bb:
+            raise ValueError(
+                f"batch {B} exceeds plan bucket {Bb}; make a bigger plan")
+        k = key.k_bucket if k is None else int(k)
+        if not (1 <= k <= key.k_bucket):
+            raise ValueError(
+                f"slice width {k} exceeds plan k bucket {key.k_bucket}")
+        il = int(il)
+        if not (0 <= il and il + k <= n):
+            raise ValueError(f"slice [{il}, {il + k}) out of range for n={n}")
+
+        if B < Bb:
+            d = jnp.concatenate([d, jnp.zeros((Bb - B, n), dtype)], axis=0)
+            e = jnp.concatenate(
+                [e, jnp.zeros((Bb - B, max(n - 1, 0)), dtype)], axis=0)
+        targets = jnp.minimum(il + jnp.arange(key.k_bucket, dtype=jnp.int32),
+                              n - 1)
+        targets = jnp.broadcast_to(targets[None, :], (Bb, key.k_bucket))
+
+        lam = _range_executor(d, e, targets, maxiter=key.maxiter,
+                              polish=key.polish)
+        _br.SOLVE_COUNTER.increment()
+        return lam[:B, :k]
+
+
 _PLAN_CACHE: dict[PlanKey, SolvePlan] = {}
+_RANGE_CACHE: dict[tuple, RangePlan] = {}
 _PLAN_LOCK = threading.Lock()
-_STATS = {"hits": 0, "misses": 0}
+_STATS = {"hits": 0, "misses": 0, "range_hits": 0, "range_misses": 0}
 
 
 def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
@@ -312,16 +402,59 @@ def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
         return plan
 
 
+def make_range_plan(n: int, k: int, batch: int = 1, *,
+                    maxiter: int | None = None, polish: int | None = None,
+                    dtype=None) -> RangePlan:
+    """Build (or fetch) the RangePlan for an (n, k, batch) sliced request.
+
+    Bucketing: ``k`` and ``batch`` round up to the next power of two and
+    the slice's start index is a traced executor input, so steady top-k /
+    bottom-k / band traffic of any window position lands on a handful of
+    compiled executables (``plan_cache_stats()`` exposes the range-cache
+    hits/misses/traces next to the full-spectrum ones).
+    """
+    from repro.core import bisect as _bis  # deferred: bisect imports plan
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    if not (1 <= k <= n):
+        raise ValueError(f"k must be in [1, n]; got k={k}, n={n}")
+    if dtype is None:
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    if maxiter is None:
+        maxiter = _bis.DEFAULT_MAX_BISECT
+    if polish is None:
+        polish = _bis.DEFAULT_POLISH
+    key = RangePlanKey(n=n, k_bucket=min(batch_bucket(k), n),
+                       batch_bucket=batch_bucket(batch),
+                       dtype=jnp.dtype(dtype).name,
+                       maxiter=int(maxiter), polish=int(polish))
+    with _PLAN_LOCK:
+        plan = _RANGE_CACHE.get(key)
+        if plan is not None:
+            _STATS["range_hits"] += 1
+            return plan
+        _STATS["range_misses"] += 1
+        plan = RangePlan(key=key)
+        _RANGE_CACHE[key] = plan
+        return plan
+
+
 def plan_cache_stats() -> dict:
     """Plan-cache observability: size/hits/misses + executor trace count."""
     with _PLAN_LOCK:
         return {"size": len(_PLAN_CACHE), "hits": _STATS["hits"],
                 "misses": _STATS["misses"],
-                "executor_traces": EXECUTOR_TRACES.count}
+                "executor_traces": EXECUTOR_TRACES.count,
+                "range_size": len(_RANGE_CACHE),
+                "range_hits": _STATS["range_hits"],
+                "range_misses": _STATS["range_misses"],
+                "range_executor_traces": RANGE_EXECUTOR_TRACES.count}
 
 
 def clear_plan_cache() -> None:
     """Drop cached plans (compiled executables stay in jax's jit cache)."""
     with _PLAN_LOCK:
         _PLAN_CACHE.clear()
-        _STATS["hits"] = _STATS["misses"] = 0
+        _RANGE_CACHE.clear()
+        for k in _STATS:
+            _STATS[k] = 0

@@ -43,6 +43,16 @@ import jax.numpy as jnp
 # nothing measurable at float64; lowering below ~12 starts to show on
 # clustered spectra.  Historically ``secular_solve`` defaulted to 40
 # while the merge tree passed 16 -- one knob now, one value.
+#
+# A 16-step budget is only sufficient together with the pole-hugging
+# initial guess in ``_solve_chunk``: roots whose origin weight is tiny
+# but above the deflation threshold (Wilkinson-type spectra produce
+# them at padded sizes) otherwise enter a geometric "double tau each
+# step" crawl that needs ~30 iterations -- the reason LAPACK's DLAED4
+# carries MAXIT = 30.  The model guess starts such roots on their own
+# magnitude, restoring quadratic convergence inside the budget (found
+# by the cross-method conformance sweep; pinned by its n = 17..25
+# Wilkinson points).
 DEFAULT_NITER = 16
 
 
@@ -125,6 +135,39 @@ def _solve_chunk(jc, d, z2, rho, kprime, niter):
 
     d_shift = d[None, :] - d_org[:, None]  # (C, K)
 
+    # ---- pole-hugging guess (origin-dominant 3-term model) --------------
+    # Write g(tau) = r(tau) - c / tau with c = rho * z2_org and
+    # r(tau) = 1 + rho * sum_{i != org} z2_i / (d_i - d_org - tau), and
+    # linearize r at the origin pole: r0 + r0' tau - c / tau = 0, i.e.
+    #
+    #     tau_m = (-r0 +- sqrt(r0^2 + 4 r0' c)) / (2 r0')
+    #
+    # (sign by which side of the pole the root lies).  This matters
+    # exactly when the origin weight is tiny-but-not-deflated (z2_org ~
+    # eps^2): the root then hugs its pole at |tau*| ~ sqrt(c / r0') --
+    # many orders of magnitude inside the gap -- and the value-matched
+    # quadratic guess below can undershoot it by decades, after which
+    # the safeguarded rational steps merely double tau per iteration
+    # (the near-double-root crawl that forces LAPACK's DLAED4 to carry
+    # MAXIT = 30).  tau_m is immune to that failure: the discriminant
+    # rides on 4 r0' c, which cancellation noise in r0 (absolute error
+    # ~ eps * sum|terms|) cannot corrupt.  The guess is only *preferred*
+    # when it lands farther from the pole than the quadratic guess and
+    # still inside the safeguard bracket, so well-conditioned roots keep
+    # their value-matched guess and identical iteration behavior.
+    mask_rest = (active_mask
+                 & (jnp.arange(K)[None, :] != origin[:, None])
+                 & (d_shift != 0.0))
+    dsafe = jnp.where(mask_rest, d_shift, 1.0)
+    terms0 = jnp.where(mask_rest, z2[None, :] / dsafe, 0.0)
+    r0 = 1.0 + rho * jnp.sum(terms0, axis=-1)
+    rp0 = rho * jnp.sum(terms0 / dsafe, axis=-1)
+    c_org = rho * z2[jnp.minimum(origin, K - 1)]
+    sq_h = jnp.sqrt(jnp.maximum(r0 * r0 + 4.0 * rp0 * c_org, 0.0))
+    tau_m = jnp.where(use_left, -r0 + sq_h, -(r0 + sq_h)) \
+        / jnp.where(rp0 > 0.0, 2.0 * rp0, 1.0)
+    valid_m = (rp0 > 0.0) & jnp.isfinite(tau_m)
+
     # ---- initial guess: value-matching 2-pole quadratic at tau_mid ------
     A_lo = rho * z2[n_lo]
     A_hi = rho * z2[n_hi]
@@ -141,6 +184,9 @@ def _solve_chunk(jc, d, z2, rho, kprime, niter):
     in1 = jnp.isfinite(g1) & (g1 > lo) & (g1 < hi)
     in2 = jnp.isfinite(g2) & (g2 > lo) & (g2 < hi)
     tau0 = jnp.where(in1, g1, jnp.where(in2, g2, 0.5 * (lo + hi)))
+    use_m = (valid_m & (tau_m > lo) & (tau_m < hi)
+             & (jnp.abs(tau_m) > jnp.abs(tau0)))
+    tau0 = jnp.where(use_m, tau_m, tau0)
 
     # ---- safeguarded middle-way iteration (DLAED4) -----------------------
     def body(_, state):

@@ -8,6 +8,9 @@
                          two-pass form; reference/benchmark baseline)
   zhat.py             -- Gu-Eisenstat stable weight reconstruction (legacy
                          two-pass form)
+  sturm_count.py      -- batched Sturm-sequence eigenvalue counts for the
+                         spectrum-slicing front end (grid over problems x
+                         probe-shift blocks)
 
 ops.py dispatches between the Pallas kernels (TPU / interpret), the
 chunked XLA fallbacks, and the dense small-K path (size-adaptive level
@@ -22,8 +25,10 @@ from repro.kernels.ops import (
     secular_solve,
     secular_solve_batched,
     set_backend,
+    sturm_count_batched,
     zhat_reconstruct,
 )
+from repro.kernels.sturm_count import sturm_count_pallas_batch
 from repro.kernels.secular_roots import (secular_solve_pallas,
                                          secular_solve_pallas_batch)
 from repro.kernels.boundary_update import boundary_rows_update_pallas
@@ -37,5 +42,6 @@ __all__ = [
     "secular_postpass_pallas_batch",
     "secular_solve", "secular_solve_batched", "secular_solve_pallas",
     "secular_solve_pallas_batch", "set_backend",
+    "sturm_count_batched", "sturm_count_pallas_batch",
     "zhat_reconstruct", "zhat_reconstruct_pallas",
 ]

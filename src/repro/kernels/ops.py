@@ -29,6 +29,8 @@ from repro.kernels.fused_update import (secular_postpass_pallas,
                                         secular_postpass_pallas_batch)
 from repro.kernels.resident_merge import (resident_merge_pallas,
                                           resident_merge_pallas_batch)
+from repro.kernels.sturm_count import (DEFAULT_SHIFT_BLOCK,
+                                       sturm_count_pallas_batch)
 from repro.kernels.zhat import zhat_reconstruct_pallas
 
 _BACKEND = "auto"
@@ -158,6 +160,25 @@ def secular_merge_resident_batched(d, z, R, rho, kprime, *,
     return _sec.secular_merge_resident_batched(d, z, R, rho, kprime,
                                                niter=niter,
                                                use_zhat=use_zhat)
+
+
+def sturm_count_batched(d, e2, shifts, pivmin, *,
+                        shift_block: int = DEFAULT_SHIFT_BLOCK,
+                        backend: str | None = None):
+    """Batched Sturm eigenvalue counts: d (B, n), e2 (B, n-1),
+    shifts (B, S), pivmin (B, 1) -> (B, S) int32 (#eigenvalues <= shift).
+
+    The bisection front end's per-iteration workhorse.  Pallas backend
+    runs one kernel launch with a problems x shift-blocks grid (each
+    step's pole rows VMEM-resident); XLA runs one fused scan over matrix
+    rows carrying all B x S pivot lanes.  Integer-exact across backends.
+    """
+    from repro.core import bisect as _bis  # deferred: core imports ops
+    if resolve_backend(backend) == "pallas":
+        return sturm_count_pallas_batch(d, e2, shifts, pivmin,
+                                        shift_block=shift_block,
+                                        interpret=_interpret())
+    return _bis.sturm_count_xla(d, e2, shifts, pivmin)
 
 
 def boundary_rows_update(R, d, z, origin, tau, kprime, *, chunk: int = 256,

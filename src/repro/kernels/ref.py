@@ -125,6 +125,37 @@ def resident_merge_batch_ref(d, z, R, rho, kprime, *, use_zhat=True,
     return tuple(jnp.stack([o[i] for o in outs]) for i in range(4))
 
 
+def sturm_count_ref(d, e2, shifts, pivmin):
+    """Literal per-(problem, shift) Python-loop Sturm count oracle.
+
+    The exact DSTEBZ negcount recurrence in scalar numpy float64 -- any
+    vectorization/tiling bug in the batched kernel (lane mixing, pivot
+    floor broadcast, pad-column reads) shows up as an integer mismatch.
+    d: (B, n); e2: (B, n-1); shifts: (B, S); pivmin: (B, 1) or (B,).
+    Returns (B, S) int32.
+    """
+    d = np.asarray(d, np.float64)
+    e2 = np.asarray(e2, np.float64)
+    shifts = np.asarray(shifts, np.float64)
+    pivmin = np.asarray(pivmin, np.float64).reshape(d.shape[0])
+    B, n = d.shape
+    out = np.zeros(shifts.shape, np.int32)
+    for b in range(B):
+        for s in range(shifts.shape[1]):
+            sig = shifts[b, s]
+            q = d[b, 0] - sig
+            if abs(q) < pivmin[b]:
+                q = -pivmin[b]
+            cnt = 1 if q <= 0.0 else 0
+            for i in range(1, n):
+                q = (d[b, i] - sig) - e2[b, i - 1] / q
+                if abs(q) < pivmin[b]:
+                    q = -pivmin[b]
+                cnt += 1 if q <= 0.0 else 0
+            out[b, s] = cnt
+    return jnp.asarray(out)
+
+
 def zhat_reconstruct_ref(d, z, origin, tau, kprime, rho):
     """Dense pairwise log-product oracle."""
     K = d.shape[0]

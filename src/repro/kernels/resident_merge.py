@@ -92,6 +92,23 @@ def _resident_kernel(d_ref, z_ref, R_ref, rho_ref, kprime_ref,
 
     d_shift = d[None, :] - d_org[:, None]                       # (K, K)
 
+    # Pole-hugging guess (mirrors core.secular._solve_chunk): linearized
+    # origin-dominant model r0 + r0' tau - rho*z2_org/tau = 0, preferred
+    # over the value-matched quadratic when it lands farther from the
+    # origin pole -- kills the near-double-root geometric crawl.
+    mask_rest = (active_pole[None, :]
+                 & (idxK[None, :] != origin[:, None])
+                 & (d_shift != 0.0))
+    dsafe_h = jnp.where(mask_rest, d_shift, 1.0)
+    terms0 = jnp.where(mask_rest, z2[None, :] / dsafe_h, 0.0)
+    r0 = 1.0 + rho * jnp.sum(terms0, axis=-1)
+    rp0 = rho * jnp.sum(terms0 / dsafe_h, axis=-1)
+    c_org = rho * z2[origin]
+    sq_h = jnp.sqrt(jnp.maximum(r0 * r0 + 4.0 * rp0 * c_org, 0.0))
+    tau_m = jnp.where(use_left, -r0 + sq_h, -(r0 + sq_h)) \
+        / jnp.where(rp0 > 0.0, 2.0 * rp0, 1.0)
+    valid_m = (rp0 > 0.0) & jnp.isfinite(tau_m)
+
     # Initial guess: value-matching 2-pole quadratic at tau_mid.
     A_lo = rho * z2[n_lo]
     A_hi = rho * z2[n_hi]
@@ -105,6 +122,9 @@ def _resident_kernel(d_ref, z_ref, R_ref, rho_ref, kprime_ref,
     in1 = jnp.isfinite(g1) & (g1 > lo) & (g1 < hi)
     in2 = jnp.isfinite(g2) & (g2 > lo) & (g2 < hi)
     tau0 = jnp.where(in1, g1, jnp.where(in2, g2, 0.5 * (lo + hi)))
+    use_m = (valid_m & (tau_m > lo) & (tau_m < hi)
+             & (jnp.abs(tau_m) > jnp.abs(tau0)))
+    tau0 = jnp.where(use_m, tau_m, tau0)
 
     tiny = jnp.finfo(dtype).tiny
 

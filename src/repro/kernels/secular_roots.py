@@ -110,6 +110,29 @@ def _secular_kernel(d_ref, z2_ref, rho_ref, kprime_ref,
     p_lo = d[n_lo] - d_org
     p_hi = d[n_hi] - d_org
 
+    # Pole-hugging guess (mirrors core.secular._solve_chunk): linearized
+    # origin-dominant model r0 + r0' tau - rho*z2_org/tau = 0, preferred
+    # over the value-matched quadratic when it lands farther from the
+    # origin pole -- kills the near-double-root geometric crawl.
+    def rest_acc(acc, dt, zt, it):
+        r_a, rp_a = acc
+        delta = dt[None, :] - d_org[:, None]
+        ok = ((it < kprime)[None, :] & (it[None, :] != origin[:, None])
+              & (delta != 0.0))
+        safe = jnp.where(ok, delta, 1.0)
+        t0 = jnp.where(ok, zt[None, :] / safe, 0.0)
+        return r_a + jnp.sum(t0, axis=-1), rp_a + jnp.sum(t0 / safe, axis=-1)
+
+    zc = jnp.zeros((C,), dtype)
+    r0s, rp0s = reduce_tiles(rest_acc, (zc, zc))
+    r0 = 1.0 + rho * r0s
+    rp0 = rho * rp0s
+    c_org = rho * z2[origin]
+    sq_h = jnp.sqrt(jnp.maximum(r0 * r0 + 4.0 * rp0 * c_org, 0.0))
+    tau_m = jnp.where(use_left, -r0 + sq_h, -(r0 + sq_h)) \
+        / jnp.where(rp0 > 0.0, 2.0 * rp0, 1.0)
+    valid_m = (rp0 > 0.0) & jnp.isfinite(tau_m)
+
     # Initial guess: value-matching 2-pole quadratic at tau_mid.
     A_lo = rho * z2[n_lo]
     A_hi = rho * z2[n_hi]
@@ -123,6 +146,9 @@ def _secular_kernel(d_ref, z2_ref, rho_ref, kprime_ref,
     in1 = jnp.isfinite(g1) & (g1 > lo) & (g1 < hi)
     in2 = jnp.isfinite(g2) & (g2 > lo) & (g2 < hi)
     tau0 = jnp.where(in1, g1, jnp.where(in2, g2, 0.5 * (lo + hi)))
+    use_m = (valid_m & (tau_m > lo) & (tau_m < hi)
+             & (jnp.abs(tau_m) > jnp.abs(tau0)))
+    tau0 = jnp.where(use_m, tau_m, tau0)
 
     tiny = jnp.finfo(dtype).tiny
 

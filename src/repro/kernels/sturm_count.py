@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: batched Sturm-sequence eigenvalue counts.
+
+The spectrum-slicing front end (core/bisect.py) spends its entire budget
+evaluating #{eigenvalues <= shift} at batches of probe shifts -- one
+sequential pivot recurrence per shift, embarrassingly parallel across
+shifts and across problems.  Mapping:
+
+  work axis                     TPU / Pallas
+  ----------------------------  ------------------------------------------
+  problems (B)                  grid axis 0 -- each step owns one
+                                problem's (n,) d / e^2 rows, VMEM-resident
+  probe shifts (S)              grid axis 1 in SHIFT_BLOCK-wide lanes; the
+                                pivot recurrence runs once per block with
+                                every lane carrying its own shift's pivot
+  matrix rows (n)               sequential fori over the resident vectors
+                                (the recurrence is a linear chain -- this
+                                is the irreducible dependence)
+
+VMEM budget per grid step: 2n + O(SHIFT_BLOCK) floats.  The count uses
+LAPACK DSTEBZ's guarded negcount convention (pivots within ``pivmin`` of
+zero are counted as negative), identical to the XLA scan in
+``core.bisect.sturm_count_xla`` -- ref.py / tests assert exact integer
+agreement across shapes, dtypes and degenerate (zero off-diagonal)
+inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_SHIFT_BLOCK = 128
+
+
+def _sturm_kernel(d_ref, e2_ref, shifts_ref, pivmin_ref, count_ref):
+    # Blocks: d (1, n), e2 (1, n) (last entry is a zero pad -- the
+    # recurrence reads e2[i-1] for i in [1, n)), shifts (1, C),
+    # pivmin (1, 1); grid = (B, shift_blocks).
+    d = d_ref[0]
+    e2 = e2_ref[0]
+    sig = shifts_ref[0]
+    pivmin = pivmin_ref[0, 0]
+    n = d.shape[0]
+
+    q = d[0] - sig
+    q = jnp.where(jnp.abs(q) < pivmin, -pivmin, q)
+    cnt = (q <= 0.0).astype(jnp.int32)
+
+    def body(i, carry):
+        q, cnt = carry
+        q = (d[i] - sig) - e2[i - 1] / q
+        q = jnp.where(jnp.abs(q) < pivmin, -pivmin, q)
+        return q, cnt + (q <= 0.0).astype(jnp.int32)
+
+    q, cnt = jax.lax.fori_loop(1, n, body, (q, cnt))
+    count_ref[0, :] = cnt
+
+
+@functools.partial(jax.jit, static_argnames=("shift_block", "interpret"))
+def sturm_count_pallas_batch(d, e2, shifts, pivmin, *,
+                             shift_block: int = DEFAULT_SHIFT_BLOCK,
+                             interpret: bool = False):
+    """Batched Pallas Sturm counts: grid over problems x shift blocks.
+
+    d: (B, n); e2: (B, n-1) squared off-diagonals; shifts: (B, S);
+    pivmin: (B, 1) pivot floors.  One kernel launch counts every
+    (problem, shift) pair -- the whole bisection front's per-iteration
+    work.  Returns (B, S) int32 counts (eigenvalues <= shift).
+    """
+    B, n = d.shape
+    S = shifts.shape[1]
+    C = min(shift_block, S)
+    nblk = (S + C - 1) // C
+    Sp = nblk * C
+    if Sp != S:
+        # Pad lanes with the last shift: duplicated counts, sliced away.
+        shifts = jnp.concatenate(
+            [shifts, jnp.broadcast_to(shifts[:, -1:], (B, Sp - S))], axis=1)
+
+    # Uniform (B, n) e2 layout; the pad column is never read (i <= n-1).
+    e2p = jnp.zeros((B, n), d.dtype).at[:, : max(n - 1, 0)].set(e2)
+    pivmin = jnp.asarray(pivmin, d.dtype).reshape(B, 1)
+
+    counts = pl.pallas_call(
+        _sturm_kernel,
+        grid=(B, nblk),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda b, i: (b, 0)),   # d, per problem
+            pl.BlockSpec((1, n), lambda b, i: (b, 0)),   # e^2
+            pl.BlockSpec((1, C), lambda b, i: (b, i)),   # shift lanes
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),   # pivot floor
+        ],
+        out_specs=pl.BlockSpec((1, C), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, Sp), jnp.int32),
+        interpret=interpret,
+    )(d, e2p, shifts, pivmin)
+    return counts[:, :S]

@@ -10,6 +10,12 @@ lam_max to a learning-rate scale:
     scale = min(1, target_sharpness / lam_max)
 
 i.e. classic 2/eta stability control.  Between probes the scale is held.
+
+``probe`` is the governor's native measurement: it runs the
+partial-spectrum path (``repro.spectral.spectral_edges`` -- Sturm-sliced
+top-1 Ritz value of the Krylov tridiagonal) rather than a full SLQ
+spectrum, because lam_max is a 1-of-m eigenvalue problem and the sliced
+solver does exactly that much work.
 """
 
 from __future__ import annotations
@@ -28,6 +34,17 @@ class SpectralGovernor:
 
     def should_probe(self, step: int) -> bool:
         return step % self.period == 0
+
+    def probe(self, matvec, params_like, rng, *, num_steps: int = 16) -> float:
+        """Measure lam_max via the sliced extremal-edge path and update.
+
+        One Lanczos probe reduced to a single sliced eigenvalue solve
+        (index m-1 of the Krylov tridiagonal) -- no full spectrum, no
+        boundary rows, no merge tree.  Returns the new lr scale.
+        """
+        from repro.spectral.slq import sharpness  # deferred: heavy import
+        return self.update(sharpness(matvec, params_like, rng,
+                                     num_steps=num_steps))
 
     def update(self, lam_max: float) -> float:
         if self._lam_max == 0.0:

@@ -1,6 +1,8 @@
 from repro.spectral.lanczos import lanczos_tridiag, lanczos_tridiag_batch
 from repro.spectral.hvp import make_hvp, make_gnvp
-from repro.spectral.slq import SpectralEstimate, slq_spectrum, sharpness
+from repro.spectral.slq import (SpectralEstimate, slq_spectrum, sharpness,
+                                spectral_edges)
 
 __all__ = ["SpectralEstimate", "lanczos_tridiag", "lanczos_tridiag_batch",
-           "make_gnvp", "make_hvp", "sharpness", "slq_spectrum"]
+           "make_gnvp", "make_hvp", "sharpness", "slq_spectrum",
+           "spectral_edges"]

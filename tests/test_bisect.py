@@ -1,0 +1,202 @@
+"""Partial-spectrum slicing: Sturm counts, bisection front end, range plans.
+
+Covers the accuracy contract (the sliced solve matches the corresponding
+slice of the full BR solve to <= 8 * eps * ||T|| on every family), the
+select-by-index / select-by-value semantics against scipy, the batched
+front door, and the (k, select)-aware range-plan compile cache.
+"""
+
+import numpy as np
+import pytest
+import scipy.linalg as sla
+
+from repro.core import (FAMILIES, eigvalsh_tridiagonal_br,
+                        eigvalsh_tridiagonal_range, make_family,
+                        make_family_batch, sturm_count)
+from repro.core.plan import RANGE_EXECUTOR_TRACES, make_range_plan
+
+pytestmark = pytest.mark.partial
+
+
+def _tnorm(d, e):
+    """Cheap ||T|| upper bound (infinity norm) for eps-relative tolerances."""
+    return float(np.max(np.abs(d)) + (2.0 * np.max(np.abs(e)) if len(e) else 0.0))
+
+
+# Internal-consistency bar (the acceptance criterion): sliced vs full BR.
+SLICE_TOL_EPS = 8.0
+# External bar vs scipy/LAPACK: both sides carry their own rounding, so
+# the cross-library tolerance is the conformance suite's documented
+# 64 * eps * ||T|| (see tests/test_conformance.py).
+EXTERNAL_TOL_EPS = 64.0
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("window", [(0, 7), (120, 135), (249, 256)])
+def test_range_matches_full_br_slice(family, window):
+    """Acceptance bar: sliced solve == the full BR solve's slice to
+    8 * eps * ||T|| on every family."""
+    n = 257
+    il, iu = window
+    d, e = make_family(family, n)
+    full = np.asarray(eigvalsh_tridiagonal_br(d, e, leaf=8).eigenvalues)
+    got = np.asarray(eigvalsh_tridiagonal_range(d, e, select="i",
+                                                il=il, iu=iu))
+    tol = SLICE_TOL_EPS * np.finfo(np.float64).eps * max(1.0, _tnorm(d, e))
+    assert got.shape == (iu - il + 1,)
+    np.testing.assert_allclose(got, full[il:iu + 1], rtol=0, atol=tol)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("n", [17, 64, 257])
+def test_range_matches_scipy(family, n):
+    d, e = make_family(family, n)
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    k = min(8, n)
+    got = np.asarray(eigvalsh_tridiagonal_range(d, e, select="i",
+                                                il=n - k, iu=n - 1))
+    tol = EXTERNAL_TOL_EPS * np.finfo(np.float64).eps * max(1.0, _tnorm(d, e))
+    np.testing.assert_allclose(got, ref[n - k:], rtol=0, atol=tol)
+
+
+@pytest.mark.parametrize("family", ["uniform", "toeplitz", "normal"])
+def test_select_by_value_matches_scipy(family):
+    n = 128
+    d, e = make_family(family, n)
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    # Window edges placed strictly between well-separated eigenvalues so
+    # the half-open (vl, vu] boundary cannot flip a count at rounding
+    # level (degenerate-gap edges are covered below).
+    vl = 0.5 * (ref[20] + ref[21])
+    vu = 0.5 * (ref[90] + ref[91])
+    got = np.asarray(eigvalsh_tridiagonal_range(d, e, select="v",
+                                                vl=vl, vu=vu))
+    tol = EXTERNAL_TOL_EPS * np.finfo(np.float64).eps * max(1.0, _tnorm(d, e))
+    assert got.shape == (70,)
+    np.testing.assert_allclose(got, ref[21:91], rtol=0, atol=tol)
+
+
+def test_select_by_value_degenerate_edges():
+    """Wilkinson W^+ has pairs split by ~eps: a window edge inside such a
+    pair legitimately lands on either side, so the contract is count
+    within the cluster multiplicity and values matching the scipy slice
+    the returned count implies."""
+    n = 128
+    d, e = make_family("wilkinson", n)
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    vl = 0.5 * (ref[20] + ref[21])       # gap here is O(1e-13)
+    vu = 0.5 * (ref[90] + ref[91])       # gap here is O(1e-14)
+    got = np.asarray(eigvalsh_tridiagonal_range(d, e, select="v",
+                                                vl=vl, vu=vu))
+    assert abs(got.shape[0] - 70) <= 2
+    tol = EXTERNAL_TOL_EPS * np.finfo(np.float64).eps * max(1.0, _tnorm(d, e))
+    start = int(np.asarray(sturm_count(d, e, np.asarray(vl))))
+    np.testing.assert_allclose(got, ref[start:start + got.shape[0]],
+                               rtol=0, atol=tol + 1e-12)
+
+
+def test_select_by_value_empty_window():
+    d, e = make_family("uniform", 64)
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    got = eigvalsh_tridiagonal_range(d, e, select="v",
+                                     vl=float(ref[-1]) + 1.0,
+                                     vu=float(ref[-1]) + 2.0)
+    assert got.shape == (0,)
+
+
+def test_range_batched_matches_loop():
+    D, E = make_family_batch("normal", 100, 5)
+    got = np.asarray(eigvalsh_tridiagonal_range(D, E, select="i",
+                                                il=90, iu=99))
+    assert got.shape == (5, 10)
+    for b in range(D.shape[0]):
+        single = np.asarray(eigvalsh_tridiagonal_range(
+            D[b], E[b], select="i", il=90, iu=99))
+        np.testing.assert_array_equal(got[b], single)
+
+
+@pytest.mark.parametrize("dtype,tol", [(np.float64, 1e-13),
+                                       (np.float32, 5e-5)])
+def test_range_dtypes(dtype, tol):
+    d, e = make_family("uniform", 128, dtype=dtype)
+    got = np.asarray(eigvalsh_tridiagonal_range(d, e, select="i",
+                                                il=120, iu=127))
+    assert got.dtype == dtype
+    ref = sla.eigh_tridiagonal(d.astype(np.float64), e.astype(np.float64),
+                               eigvals_only=True)
+    np.testing.assert_allclose(got.astype(np.float64), ref[120:],
+                               rtol=0, atol=tol * max(1.0, _tnorm(d, e)))
+
+
+def test_range_window_shift_hits_cache():
+    """Any (il, iu) window of the same bucketed width shares one
+    executable: the target indices are traced, never static."""
+    d, e = make_family("uniform", 200)
+    _ = eigvalsh_tridiagonal_range(d, e, select="i", il=0, iu=5)
+    with RANGE_EXECUTOR_TRACES.measure() as w:
+        _ = eigvalsh_tridiagonal_range(d, e, select="i", il=100, iu=105)
+        _ = eigvalsh_tridiagonal_range(d, e, select="i", il=194, iu=199)
+        _ = eigvalsh_tridiagonal_range(d, e, select="i", il=0, iu=7)
+    assert w.count == 0, "same-bucket window traffic must not retrace"
+
+
+def test_range_plan_bucketing():
+    p1 = make_range_plan(333, 5)
+    p2 = make_range_plan(333, 8)
+    assert p1 is p2                      # k=5 rounds up into the k=8 bucket
+    assert p1.key.k_bucket == 8
+    p3 = make_range_plan(333, 9)
+    assert p3.key.k_bucket == 16
+    assert make_range_plan(333, 5, batch=3).key.batch_bucket == 4
+
+
+def test_sturm_count_matches_spectrum():
+    d, e = make_family("normal", 96)
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    mids = 0.5 * (ref[:-1] + ref[1:])    # strictly between eigenvalues
+    cnt = np.asarray(sturm_count(d, e, mids))
+    np.testing.assert_array_equal(cnt, np.arange(1, 96))
+    assert int(sturm_count(d, e, ref[-1] + 1.0)) == 96
+    assert int(sturm_count(d, e, ref[0] - 1.0)) == 0
+
+
+def test_sturm_count_zero_offdiagonal():
+    d = np.array([3.0, -1.0, 2.0, -1.0])
+    e = np.zeros(3)
+    cnt = np.asarray(sturm_count(d, e, np.array([-2.0, 0.0, 2.5, 10.0])))
+    np.testing.assert_array_equal(cnt, [0, 2, 3, 4])
+
+
+def test_range_n1():
+    got = eigvalsh_tridiagonal_range(np.array([4.5]), np.zeros(0),
+                                     select="i", il=0, iu=0)
+    np.testing.assert_array_equal(np.asarray(got), [4.5])
+
+
+def test_range_validation():
+    d, e = make_family("uniform", 32)
+    with pytest.raises(ValueError, match="index range"):
+        eigvalsh_tridiagonal_range(d, e, select="i", il=5, iu=3)
+    with pytest.raises(ValueError, match="index range"):
+        eigvalsh_tridiagonal_range(d, e, select="i", il=0, iu=32)
+    with pytest.raises(ValueError, match="requires il and iu"):
+        eigvalsh_tridiagonal_range(d, e, select="i")
+    with pytest.raises(ValueError, match="vl < vu"):
+        eigvalsh_tridiagonal_range(d, e, select="v", vl=1.0, vu=1.0)
+    with pytest.raises(ValueError, match="single problems"):
+        eigvalsh_tridiagonal_range(np.stack([d, d]), np.stack([e, e]),
+                                   select="v", vl=0.0, vu=1.0)
+    with pytest.raises(ValueError, match="select"):
+        eigvalsh_tridiagonal_range(d, e, select="x", il=0, iu=1)
+
+
+def test_range_clustered_duplicates():
+    """Tight clusters (the bisection worst case: brackets shrink onto
+    near-coincident roots) still match scipy at the shared tolerance."""
+    d = np.ones(64)
+    e = np.full(63, 1e-3)
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    got = np.asarray(eigvalsh_tridiagonal_range(d, e, select="i",
+                                                il=0, iu=63))
+    tol = EXTERNAL_TOL_EPS * np.finfo(np.float64).eps * max(1.0, _tnorm(d, e))
+    np.testing.assert_allclose(got, ref, rtol=0, atol=tol)

@@ -53,7 +53,7 @@ def test_full_dc_eigenpairs(n):
 def test_all_methods_agree():
     d, e = make_family("normal", 150)
     ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
-    for method in ("br", "sterf", "lazy", "full", "eigh"):
+    for method in ("br", "sterf", "lazy", "full", "eigh", "bisect"):
         got = np.asarray(eigvalsh_tridiagonal(d, e, method=method))
         err = np.max(np.abs(got - ref)) / max(1, np.max(np.abs(ref)))
         assert err < 1e-10, (method, err)

@@ -16,19 +16,34 @@ def _efwd(got, ref):
     return np.max(np.abs(np.asarray(got) - ref)) / max(1.0, np.max(np.abs(ref)))
 
 
+# dtype sweep tolerances (relative, forward error vs the float64 LAPACK
+# reference): the float32 bar is eps_f32-relative with the same ~2000x
+# headroom the float64 bar carries.  The sweep exists to catch silent
+# dtype promotion (bare Python constants are weakly typed under jax, so
+# a strongly-typed f64 scalar sneaking into the merge would *pass* at
+# f64 and only show as an unexpected output dtype here).
+_DTYPE_TOL = {np.float64: 5e-13, np.float32: 5e-4}
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
 @pytest.mark.parametrize("family", FAMILIES)
 @pytest.mark.parametrize("n", [5, 16, 33, 64, 100, 257, 512])
-def test_br_matches_lapack(family, n):
-    d, e = make_family(family, n)
+def test_br_matches_lapack(family, n, dtype):
+    d, e = make_family(family, n, dtype=dtype)
     got = eigvalsh_tridiagonal(d, e, leaf=8)
-    assert _efwd(got, _ref(d, e)) < 5e-13
+    assert got.dtype == dtype
+    assert _efwd(got, _ref(d.astype(np.float64),
+                           e.astype(np.float64))) < _DTYPE_TOL[dtype]
 
 
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
 @pytest.mark.parametrize("leaf", [4, 8, 16, 32])
-def test_leaf_size_invariance(leaf):
-    d, e = make_family("uniform", 200)
+def test_leaf_size_invariance(leaf, dtype):
+    d, e = make_family("uniform", 200, dtype=dtype)
     got = eigvalsh_tridiagonal(d, e, leaf=leaf)
-    assert _efwd(got, _ref(d, e)) < 5e-13
+    assert got.dtype == dtype
+    assert _efwd(got, _ref(d.astype(np.float64),
+                           e.astype(np.float64))) < _DTYPE_TOL[dtype]
 
 
 @pytest.mark.parametrize("chunk", [16, 64, 333])

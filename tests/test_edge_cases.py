@@ -1,0 +1,178 @@
+"""Degenerate-input contracts for every public eigensolver entry point.
+
+Covers n = 1, n = 2, all-zero off-diagonal (diagonal input), the all-zero
+matrix, and duplicate-eigenvalue clusters across:
+
+  * ``eigvalsh_tridiagonal``        (every method)
+  * ``eigvalsh_tridiagonal_br``     (incl. return_boundary)
+  * ``eigvalsh_tridiagonal_batch``  (the batched front door)
+  * ``eigvalsh_tridiagonal_range``  (the sliced front door)
+
+Exactness contract: with e == 0 the D&C paths deflate every merge
+completely and the leaf eigendecompositions are diagonal, so the result
+is the *exactly* sorted diagonal (bit-for-bit); sterf converges at step
+zero and is exact too.  The bisection paths converge to within their
+bracket tolerance instead (~2 eps * ||T||) -- a root polished between
+two adjacent floats has no reason to land on the input bit pattern -- so
+the sliced/bisect assertions carry that small allowance.
+"""
+
+import numpy as np
+import pytest
+import scipy.linalg as sla
+
+from repro.core import (METHODS, eigvalsh_tridiagonal,
+                        eigvalsh_tridiagonal_batch, eigvalsh_tridiagonal_br,
+                        eigvalsh_tridiagonal_range)
+
+_KW = {"br": {"leaf": 8}, "lazy": {"leaf": 8}, "full": {"leaf": 8},
+       "sterf": {}, "eigh": {}, "bisect": {}}
+EPS = np.finfo(np.float64).eps
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_n1(method):
+    got = np.asarray(eigvalsh_tridiagonal(np.array([2.5]), np.zeros(0),
+                                          method=method, **_KW[method]))
+    np.testing.assert_array_equal(got, [2.5])
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_n2(method):
+    d = np.array([1.0, -1.0])
+    e = np.array([0.5])
+    got = np.asarray(eigvalsh_tridiagonal(d, e, method=method,
+                                          **_KW[method]))
+    want = np.array([-np.sqrt(1.25), np.sqrt(1.25)])
+    np.testing.assert_allclose(got, want, rtol=0, atol=16 * EPS)
+
+
+def test_n1_n2_other_entry_points():
+    res = eigvalsh_tridiagonal_br(np.array([3.0]), np.zeros(0),
+                                  return_boundary=True)
+    np.testing.assert_array_equal(np.asarray(res.eigenvalues), [3.0])
+    np.testing.assert_array_equal(np.asarray(res.blo), [1.0])
+
+    res = eigvalsh_tridiagonal_batch(np.array([[1.0], [2.0]]),
+                                     np.zeros((2, 0)))
+    np.testing.assert_array_equal(np.asarray(res.eigenvalues),
+                                  [[1.0], [2.0]])
+
+    got = eigvalsh_tridiagonal_range(np.array([1.0, -1.0]), np.array([0.5]),
+                                     select="i", il=1, iu=1)
+    np.testing.assert_allclose(np.asarray(got), [np.sqrt(1.25)],
+                               rtol=0, atol=16 * EPS)
+
+    res = eigvalsh_tridiagonal_br(np.array([4.0, 1.0]), np.array([0.0]),
+                                  return_boundary=True)
+    np.testing.assert_array_equal(np.asarray(res.eigenvalues), [1.0, 4.0])
+
+
+@pytest.mark.parametrize("method", ["br", "sterf", "lazy", "full"])
+def test_diagonal_input_exact(method):
+    """e == 0: every merge deflates completely; the result IS sorted d."""
+    rng = np.random.default_rng(7)
+    d = rng.standard_normal(37)
+    got = np.asarray(eigvalsh_tridiagonal(d, np.zeros(36), method=method,
+                                          **_KW[method]))
+    np.testing.assert_array_equal(got, np.sort(d))
+
+
+def test_diagonal_input_exact_batched():
+    rng = np.random.default_rng(8)
+    D = rng.standard_normal((3, 41))
+    res = eigvalsh_tridiagonal_batch(D, np.zeros((3, 40)), leaf=8)
+    np.testing.assert_array_equal(np.asarray(res.eigenvalues),
+                                  np.sort(D, axis=1))
+
+
+def test_diagonal_input_exact_boundary_rows():
+    """Padded diagonal input with boundary rows: still exact, unit rows."""
+    rng = np.random.default_rng(9)
+    d = rng.standard_normal(19)
+    res = eigvalsh_tridiagonal_br(d, np.zeros(18), leaf=8,
+                                  return_boundary=True)
+    np.testing.assert_array_equal(np.asarray(res.eigenvalues), np.sort(d))
+    assert abs(np.linalg.norm(np.asarray(res.blo)) - 1.0) < 1e-12
+    assert abs(np.linalg.norm(np.asarray(res.bhi)) - 1.0) < 1e-12
+
+
+def test_diagonal_input_range_near_exact():
+    """The bisection paths converge to the bracket tolerance, not the
+    input bit pattern -- allow ~2 eps * ||T||."""
+    rng = np.random.default_rng(10)
+    d = rng.standard_normal(37)
+    want = np.sort(d)
+    tol = 4 * EPS * np.max(np.abs(d))
+    got = np.asarray(eigvalsh_tridiagonal_range(d, np.zeros(36),
+                                                select="i", il=0, iu=36))
+    np.testing.assert_allclose(got, want, rtol=0, atol=tol)
+    top = np.asarray(eigvalsh_tridiagonal_range(d, np.zeros(36),
+                                                select="i", il=30, iu=36))
+    np.testing.assert_allclose(top, want[30:], rtol=0, atol=tol)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_all_zero_matrix(method):
+    got = np.asarray(eigvalsh_tridiagonal(np.zeros(16), np.zeros(15),
+                                          method=method, **_KW[method]))
+    np.testing.assert_array_equal(got, np.zeros(16))
+
+
+def test_all_zero_matrix_other_entry_points():
+    res = eigvalsh_tridiagonal_batch(np.zeros((2, 16)), np.zeros((2, 15)),
+                                     leaf=8)
+    np.testing.assert_array_equal(np.asarray(res.eigenvalues),
+                                  np.zeros((2, 16)))
+    got = eigvalsh_tridiagonal_range(np.zeros(16), np.zeros(15),
+                                     select="i", il=4, iu=11)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(8))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_duplicate_eigenvalue_cluster(method):
+    """Weakly coupled constant diagonal: a cluster of near-identical
+    eigenvalues around 1 (heavy deflation in the D&C paths, near-double
+    roots in the bisection path)."""
+    d = np.ones(48)
+    e = np.full(47, 1e-3)
+    got = np.asarray(eigvalsh_tridiagonal(d, e, method=method,
+                                          **_KW[method]))
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    nrm = np.max(np.abs(d)) + 2 * np.max(np.abs(e))
+    np.testing.assert_allclose(got, ref, rtol=0, atol=64 * EPS * nrm)
+
+
+def test_duplicate_cluster_batched_and_range():
+    d = np.ones(48)
+    e = np.full(47, 1e-3)
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    nrm = np.max(np.abs(d)) + 2 * np.max(np.abs(e))
+    res = eigvalsh_tridiagonal_batch(np.stack([d, d]), np.stack([e, e]),
+                                     leaf=8)
+    for b in range(2):
+        np.testing.assert_allclose(np.asarray(res.eigenvalues[b]), ref,
+                                   rtol=0, atol=64 * EPS * nrm)
+    got = np.asarray(eigvalsh_tridiagonal_range(d, e, select="i",
+                                                il=40, iu=47))
+    np.testing.assert_allclose(got, ref[40:], rtol=0, atol=64 * EPS * nrm)
+
+
+def test_zero_offdiagonal_segment_splits():
+    """Interior exact zeros decouple the problem exactly (rho == 0
+    merges deflate completely) -- every entry point agrees with scipy."""
+    rng = np.random.default_rng(3)
+    d = rng.standard_normal(64)
+    e = rng.uniform(0.1, 0.3, 63)
+    e[13] = 0.0
+    e[40] = 0.0
+    ref = sla.eigh_tridiagonal(d, e, eigvals_only=True)
+    nrm = np.max(np.abs(d)) + 2 * np.max(np.abs(e))
+    for method in METHODS:
+        got = np.asarray(eigvalsh_tridiagonal(d, e, method=method,
+                                              **_KW[method]))
+        np.testing.assert_allclose(got, ref, rtol=0, atol=64 * EPS * nrm,
+                                   err_msg=method)
+    got = np.asarray(eigvalsh_tridiagonal_range(d, e, select="i",
+                                                il=10, iu=20))
+    np.testing.assert_allclose(got, ref[10:21], rtol=0, atol=64 * EPS * nrm)

@@ -271,6 +271,53 @@ def test_solver_resident_threshold_is_dispatch_knob_only():
                                rtol=0, atol=1e-10)
 
 
+# ---------------------------------------------------------------------------
+# Sturm-count kernel (partial-spectrum front end)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.partial
+@pytest.mark.parametrize("B,n,S", [(1, 8, 4), (4, 64, 130), (3, 1, 5),
+                                   (2, 257, 1), (8, 33, 32)])
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+def test_sturm_kernel_vs_oracle(B, n, S, dtype):
+    """Counts are integers: the Pallas kernel must match the scalar
+    Python-loop oracle EXACTLY (and the XLA scan too) on every lane."""
+    from repro.core.bisect import _pivot_floor, sturm_count_xla
+    from repro.kernels.sturm_count import sturm_count_pallas_batch
+
+    rng = np.random.default_rng(B * 1000 + n)
+    d = jnp.asarray(rng.standard_normal((B, n)), dtype)
+    e = rng.uniform(0.05, 0.5, (B, max(n - 1, 0)))
+    e2 = jnp.asarray(e * e, dtype)
+    shifts = jnp.asarray(rng.uniform(-3, 3, (B, S)), dtype)
+    pivmin = _pivot_floor(e2, d.dtype)
+    got = sturm_count_pallas_batch(d, e2, shifts, pivmin, shift_block=32,
+                                   interpret=True)
+    want = ref.sturm_count_ref(np.asarray(d), np.asarray(e2),
+                               np.asarray(shifts), np.asarray(pivmin))
+    xla = sturm_count_xla(d, e2, shifts, pivmin)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(xla), np.asarray(want))
+
+
+@pytest.mark.partial
+def test_sturm_kernel_shift_block_invariance():
+    """The shift-block width is a tiling knob, never a semantics knob."""
+    from repro.core.bisect import _pivot_floor
+    from repro.kernels.sturm_count import sturm_count_pallas_batch
+
+    rng = np.random.default_rng(11)
+    d = jnp.asarray(rng.standard_normal((2, 100)))
+    e2 = jnp.asarray(rng.uniform(0.01, 0.25, (2, 99)))
+    shifts = jnp.asarray(rng.uniform(-3, 3, (2, 77)))
+    pivmin = _pivot_floor(e2, d.dtype)
+    outs = [np.asarray(sturm_count_pallas_batch(
+        d, e2, shifts, pivmin, shift_block=sb, interpret=True))
+        for sb in (8, 64, 128)]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
 def test_zhat_improves_or_matches_weights():
     """Reconstructed weights stay close to the originals for a
     well-conditioned problem (sanity on the log-product path)."""

@@ -1,10 +1,15 @@
-"""Property-based tests (hypothesis) for the secular solver + merge core.
+"""Property-based tests (hypothesis) for the secular solver + solver core.
 
 System invariants under test:
   * interlacing:  d_j < lam_j < d_{j+1}  (strict, active poles)
   * agreement with dense numpy eigvalsh on diag(d) + rho z z^T
   * deflation invariance: zero-weight poles pass through exactly
   * shift invariance: spectrum(d + c) == spectrum(d) + c
+  * whole-solver analytic invariants, run against BOTH the full BR path
+    and the sliced (Sturm bisection) range path:
+      - affine equivariance  eig(alpha T + beta I) = alpha eig(T) + beta
+      - trace / Frobenius     sum lam = sum d;  sum lam^2 = |d|^2 + 2|e|^2
+      - Cauchy interlacing of the leading (n-1)-submatrix
 """
 
 import numpy as np
@@ -111,3 +116,101 @@ def test_br_full_pipeline_property(prob):
     # |e| is WLOG: the tridiagonal spectrum is invariant to off-diag signs
     scale = max(1.0, np.max(np.abs(ref)))
     assert np.max(np.abs(got - ref)) / scale < 1e-11
+
+
+# ---------------------------------------------------------------------------
+# Whole-solver analytic invariants (full BR path AND the sliced range path)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def tridiag_problem_fixed_n(draw):
+    """Like tridiag_problem but n drawn from a small set, so the sliced
+    path's per-n executables stay on a handful of compiles."""
+    n = draw(st.sampled_from([16, 33, 64, 100]))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal(n)
+    e = rng.uniform(1e-3, 1.0, n - 1) * rng.choice([-1.0, 1.0], n - 1)
+    return d, e
+
+
+def _solve_both_paths(d, e, il, iu):
+    """(full-path slice, range-path slice) over indices [il, iu]."""
+    from repro.core import eigvalsh_tridiagonal, eigvalsh_tridiagonal_range
+    full = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8))[il:iu + 1]
+    rng_ = np.asarray(eigvalsh_tridiagonal_range(d, e, select="i",
+                                                 il=il, iu=iu))
+    return full, rng_
+
+
+@given(tridiag_problem_fixed_n(),
+       st.floats(min_value=0.1, max_value=4.0, allow_nan=False),
+       st.floats(min_value=-5.0, max_value=5.0, allow_nan=False))
+@settings(max_examples=20, deadline=None)
+def test_affine_equivariance_both_paths(prob, alpha, beta):
+    """eig(alpha T + beta I) == alpha eig(T) + beta, positive alpha (index
+    order preserved), for the full BR path and the sliced range path."""
+    d, e = prob
+    n = len(d)
+    il, iu = n // 3, n // 3 + min(5, n // 2)
+    base_f, base_r = _solve_both_paths(d, e, il, iu)
+    aff_f, aff_r = _solve_both_paths(alpha * d + beta, alpha * e, il, iu)
+    scale = max(1.0, abs(alpha) * np.max(np.abs(d)) + abs(beta))
+    assert np.max(np.abs(aff_f - (alpha * base_f + beta))) / scale < 1e-10
+    assert np.max(np.abs(aff_r - (alpha * base_r + beta))) / scale < 1e-10
+
+
+@given(tridiag_problem_fixed_n())
+@settings(max_examples=15, deadline=None)
+def test_negation_reverses_spectrum_both_paths(prob):
+    """alpha = -1: eig(-T) = -reverse(eig(T)); the top-k slice of -T is
+    the negated bottom-k slice of T."""
+    from repro.core import eigvalsh_tridiagonal, eigvalsh_tridiagonal_range
+    d, e = prob
+    n = len(d)
+    lam = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8))
+    neg = np.asarray(eigvalsh_tridiagonal(-d, e, leaf=8))
+    scale = max(1.0, np.max(np.abs(lam)))
+    assert np.max(np.abs(neg - (-lam[::-1]))) / scale < 1e-10
+    k = min(4, n)
+    top_neg = np.asarray(eigvalsh_tridiagonal_range(-d, e, select="i",
+                                                    il=n - k, iu=n - 1))
+    assert np.max(np.abs(top_neg - (-lam[:k][::-1]))) / scale < 1e-10
+
+
+@given(tridiag_problem_fixed_n())
+@settings(max_examples=20, deadline=None)
+def test_trace_and_frobenius_invariants(prob):
+    """sum lam == trace(T) and sum lam^2 == ||T||_F^2 = |d|^2 + 2|e|^2
+    -- exact matrix invariants every correct spectrum must reproduce."""
+    from repro.core import eigvalsh_tridiagonal
+    d, e = prob
+    n = len(d)
+    for method in ("br", "bisect"):
+        lam = np.asarray(eigvalsh_tridiagonal(
+            d, e, method=method, **({"leaf": 8} if method == "br" else {})))
+        tr = np.sum(d)
+        fro2 = np.sum(d * d) + 2.0 * np.sum(e * e)
+        scale = max(1.0, abs(tr), fro2)
+        assert abs(np.sum(lam) - tr) / max(1.0, abs(tr)) < n * 1e-13, method
+        assert abs(np.sum(lam * lam) - fro2) / fro2 < n * 1e-13, method
+
+
+@given(tridiag_problem_fixed_n())
+@settings(max_examples=15, deadline=None)
+def test_cauchy_interlacing_both_paths(prob):
+    """Eigenvalues of the leading (n-1)-submatrix interlace the full
+    spectrum: lam_j(T) <= mu_j <= lam_{j+1}(T)."""
+    from repro.core import eigvalsh_tridiagonal, eigvalsh_tridiagonal_range
+    d, e = prob
+    n = len(d)
+    lam = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8))
+    tol = 1e-10 * max(1.0, np.max(np.abs(lam)))
+    for path in ("br", "range"):
+        if path == "br":
+            mu = np.asarray(eigvalsh_tridiagonal(d[:-1], e[:-1], leaf=8))
+        else:
+            mu = np.asarray(eigvalsh_tridiagonal_range(
+                d[:-1], e[:-1], select="i", il=0, iu=n - 2))
+        assert np.all(lam[:-1] <= mu + tol), path
+        assert np.all(mu <= lam[1:] + tol), path

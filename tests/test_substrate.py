@@ -127,6 +127,41 @@ def test_slq_trace_estimate():
     assert abs(est.lam_max - true_lmax) / true_lmax < 0.05
 
 
+@pytest.mark.partial
+def test_spectral_edges_matches_dense_extremes():
+    """The sliced extremal-edge path (no full spectrum, no boundary rows)
+    agrees with the dense operator's edge eigenvalues."""
+    from repro.spectral import sharpness, spectral_edges
+    rng = np.random.default_rng(2)
+    Q, _ = np.linalg.qr(rng.standard_normal((50, 50)))
+    lam_true = np.linspace(0.5, 8.0, 50)
+    A = jnp.asarray(Q @ np.diag(lam_true) @ Q.T)
+    lo, hi = spectral_edges(_sym_matvec(A), {"x": jnp.zeros(50)},
+                            jax.random.PRNGKey(3), num_probes=2,
+                            num_steps=30, k=2)
+    assert lo.shape == (2, 2) and hi.shape == (2, 2)
+    assert abs(float(np.max(hi)) - 8.0) / 8.0 < 0.02
+    assert abs(float(np.min(lo)) - 0.5) / 0.5 < 0.2
+    s = sharpness(_sym_matvec(A), {"x": jnp.zeros(50)},
+                  jax.random.PRNGKey(4), num_steps=30)
+    assert abs(s - 8.0) / 8.0 < 0.02
+
+
+@pytest.mark.partial
+def test_governor_probe_uses_sliced_path():
+    from repro.optim.spectral_adapt import SpectralGovernor
+    rng = np.random.default_rng(5)
+    M = rng.standard_normal((30, 30))
+    A = jnp.asarray(M @ M.T / 30 + np.eye(30))
+    gov = SpectralGovernor(target_sharpness=1.0, ema=0.0)
+    scale = gov.probe(_sym_matvec(A), {"x": jnp.zeros(30)},
+                      jax.random.PRNGKey(6), num_steps=20)
+    true_lmax = float(np.linalg.eigvalsh(np.asarray(A))[-1])
+    assert gov.lam_max == pytest.approx(true_lmax, rel=0.05)
+    assert scale == pytest.approx(max(gov.min_scale,
+                                      min(1.0, 1.0 / gov.lam_max)))
+
+
 def test_hvp_on_quadratic():
     from repro.spectral import make_hvp
     A = jnp.asarray([[2.0, 1.0], [1.0, 3.0]])
