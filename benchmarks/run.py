@@ -25,6 +25,10 @@ def main(argv=None) -> None:
                     default=None, metavar="PATH",
                     help="also write results as JSON (default "
                          "BENCH_conquer.json)")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="compile the common benchmark plan buckets before "
+                         "timing (plan.prewarm) so suite rows measure "
+                         "steady-state executables, not first-call traces")
     ap.add_argument("--host-devices", type=int, default=None,
                     help="force this many XLA host CPU devices (default: "
                          "cpu count) so batched solves shard across cores; "
@@ -42,7 +46,10 @@ def main(argv=None) -> None:
     from repro.hostdev import force_host_devices  # jax-free
     if args.host_devices is not None:
         force_host_devices(args.host_devices)
-    elif args.only == "batched":
+    elif args.only in ("batched", "serve"):
+        # serve: coalesced flushes shard across host devices exactly like
+        # the batched suite; the one-by-one baseline is one problem wide
+        # and cannot, which is the point of the comparison.
         force_host_devices()
 
     import jax
@@ -50,8 +57,18 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_accuracy, bench_batched, bench_fused,
                             bench_kernels, bench_merge, bench_partial,
-                            bench_scaling, bench_vs_lazy, bench_vs_sterf,
-                            bench_workspace, roofline)
+                            bench_scaling, bench_serve, bench_vs_lazy,
+                            bench_vs_sterf, bench_workspace, roofline)
+
+    if args.prewarm:
+        from repro.core.plan import prewarm
+        sizes = (256, 512) if args.quick else (256, 512, 1024, 2048)
+        spec = [{"kind": "solve", "n": nn, "batch": 1} for nn in sizes]
+        spec.append({"kind": "range", "n": 1024 if args.quick else 4096,
+                     "k": 32, "batch": 1})
+        info = prewarm(spec)
+        print(f"# prewarm: {info['plans']} plans, {info['traces']} traces, "
+              f"{info['seconds']:.1f}s", flush=True)
 
     rows = []
     records = []
@@ -84,6 +101,7 @@ def main(argv=None) -> None:
             report, sizes=(512, 1024) if args.quick else (1024, 2048, 4096)),
         "merge": lambda: bench_merge.run(report, quick=args.quick),
         "partial": lambda: bench_partial.run(report, quick=args.quick),
+        "serve": lambda: bench_serve.run(report, quick=args.quick),
         "roofline": lambda: roofline.run(report),
     }
 

@@ -7,6 +7,14 @@ against, all sharing one merge core so exact-arithmetic equivalence
 
 from repro.core.api import eigvalsh_tridiagonal, METHODS
 from repro.core.bisect import eigvalsh_tridiagonal_range, sturm_count
+from repro.core.request import (
+    KINDS,
+    RoutedRequest,
+    SolveRequest,
+    SolveResult,
+    execute_request,
+    route_request,
+)
 from repro.core.br_dc import (
     BRBatchResult,
     BRResult,
@@ -22,6 +30,11 @@ from repro.core.plan import (
     make_plan,
     make_range_plan,
     plan_cache_stats,
+    plan_for_route,
+    prewarm,
+    range_plan_for_route,
+    resolve_range_route,
+    resolve_solve_route,
 )
 from repro.core.sterf import eigvalsh_tridiagonal_sterf
 from repro.core.baselines import (
@@ -49,18 +62,22 @@ from repro.core.tridiag import (
 )
 
 __all__ = [
-    "BRBatchResult", "BRResult", "FAMILIES", "METHODS", "RangePlan",
+    "BRBatchResult", "BRResult", "FAMILIES", "KINDS", "METHODS",
+    "RangePlan", "RoutedRequest",
     "SOLVE_COUNTER",
-    "SolvePlan", "boundary_rows_update", "clear_plan_cache",
+    "SolvePlan", "SolveRequest", "SolveResult",
+    "boundary_rows_update", "clear_plan_cache",
     "dense_from_tridiag",
     "eig_tridiagonal_full_dc", "eigvalsh_tridiagonal",
     "eigvalsh_tridiagonal_batch", "eigvalsh_tridiagonal_bisect",
     "eigvalsh_tridiagonal_br",
     "eigvalsh_tridiagonal_full_discard",
     "eigvalsh_tridiagonal_lazy", "eigvalsh_tridiagonal_range",
-    "eigvalsh_tridiagonal_sterf",
+    "eigvalsh_tridiagonal_sterf", "execute_request",
     "gershgorin_bounds", "make_family", "make_family_batch",
-    "make_plan", "make_range_plan", "plan_cache_stats",
+    "make_plan", "make_range_plan", "plan_cache_stats", "plan_for_route",
+    "prewarm", "range_plan_for_route", "resolve_range_route",
+    "resolve_solve_route", "route_request",
     "secular_eigenvalues",
     "secular_solve", "sturm_count", "workspace_model",
     "workspace_model_bisect", "workspace_model_full",

@@ -25,36 +25,27 @@ plan/executor core (one launch, bucketed compile cache) and "bisect"
 through the batched range executor; the baselines (which exist to model
 per-problem quadratic state) fall back to a loop of single solves and
 return the stacked (B, n) spectra.
+
+Every call here is a thin wrapper over the request/response core
+(``repro.core.request``): the arguments become a :class:`SolveRequest`,
+which is routed to its bucketed compile-cache key and executed -- the
+exact path the serving layer (``repro.serve``) drives concurrently, so a
+request answered by the service is bit-for-bit the sync answer.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.bisect import eigvalsh_tridiagonal_range
-from repro.core.br_dc import (eigvalsh_tridiagonal_batch,
-                              eigvalsh_tridiagonal_br)
-from repro.core.sterf import eigvalsh_tridiagonal_sterf
-from repro.core import baselines as _bl
+from repro.core.bisect import eigvalsh_tridiagonal_range  # noqa: F401 (re-export)
+from repro.core.br_dc import (eigvalsh_tridiagonal_batch,  # noqa: F401
+                              eigvalsh_tridiagonal_br)     # noqa: F401
+from repro.core.request import (METHODS, SolveRequest, SolveResult,
+                                execute_request, route_request)
 
-METHODS = ("br", "sterf", "lazy", "full", "eigh", "bisect")
-
-
-def _solve_single(d, e, method, kw):
-    if method == "br":
-        return eigvalsh_tridiagonal_br(d, e, **kw).eigenvalues
-    if method == "sterf":
-        return eigvalsh_tridiagonal_sterf(d, e, **kw)
-    if method == "lazy":
-        return _bl.eigvalsh_tridiagonal_lazy(d, e, **kw)
-    if method == "full":
-        return _bl.eigvalsh_tridiagonal_full_discard(d, e, **kw)
-    if method == "eigh":
-        from repro.core.tridiag import dense_from_tridiag
-        return jnp.linalg.eigvalsh(dense_from_tridiag(d, e))
-    if method == "bisect":
-        return _bl.eigvalsh_tridiagonal_bisect(d, e, **kw)
-    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+__all__ = ["METHODS", "SolveRequest", "SolveResult", "eigvalsh_tridiagonal",
+           "eigvalsh_tridiagonal_batch", "eigvalsh_tridiagonal_br",
+           "eigvalsh_tridiagonal_range", "execute_request", "route_request"]
 
 
 def eigvalsh_tridiagonal(d, e, method: str = "br", **kw):
@@ -67,20 +58,8 @@ def eigvalsh_tridiagonal(d, e, method: str = "br", **kw):
     methods.
     """
     d = jnp.asarray(d)
-    e = jnp.asarray(e)
-    if d.ndim == 2:
-        if method == "br":
-            return eigvalsh_tridiagonal_batch(d, e, **kw).eigenvalues
-        if method == "bisect":
-            # Natively batched: one sliced solve covering all n indices.
-            n = d.shape[1]
-            return eigvalsh_tridiagonal_range(d, e, select="i", il=0,
-                                              iu=n - 1, **kw)
-        if method not in METHODS:
-            raise ValueError(
-                f"unknown method {method!r}; choose from {METHODS}")
-        from repro.core.br_dc import _as_batch
-        d, e = _as_batch(d, e, None)  # same shape contract as the br path
-        return jnp.stack([_solve_single(d[b], e[b], method, kw)
-                          for b in range(d.shape[0])])
-    return _solve_single(d, e, method, kw)
+    kind = "batch" if d.ndim == 2 else "full"
+    req = SolveRequest(d=d, e=e, kind=kind, method=method,
+                       return_boundary=bool(kw.pop("return_boundary", False)),
+                       knobs=kw)
+    return execute_request(req).eigenvalues

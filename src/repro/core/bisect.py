@@ -266,48 +266,15 @@ def eigvalsh_tridiagonal_range(d, e, *, select: str = "i",
       returned eigenvalue matches the corresponding entry of the full
       solve to <= 8 * eps * ||T||.
     """
-    d = jnp.asarray(d)
-    e = jnp.asarray(e)
+    # The request core (repro.core.request) owns selection resolution
+    # (select="v" becomes an index window via two Sturm counts there) and
+    # the plan-cache launch; this wrapper exists for the keyword-argument
+    # surface.  Service and sync range requests therefore share one code
+    # path by construction.
+    from repro.core.request import SolveRequest, execute_request
+    knobs = {"maxiter": maxiter, "polish": polish}
     if dtype is not None:
-        d = d.astype(dtype)
-        e = e.astype(dtype)
-    if e.dtype != d.dtype:
-        e = e.astype(d.dtype)
-    batched = d.ndim == 2
-    if not batched:
-        d = d[None, :]
-        e = e[None, :]
-    from repro.core.br_dc import _as_batch
-    d, e = _as_batch(d, e, None)
-    B, n = d.shape
-
-    if select == "i":
-        if il is None or iu is None:
-            raise ValueError("select='i' requires il and iu")
-        il, iu = _validate_index_range(n, il, iu)
-    elif select == "v":
-        if vl is None or vu is None:
-            raise ValueError("select='v' requires vl and vu")
-        if not (float(vl) < float(vu)):
-            raise ValueError(f"select='v' requires vl < vu; got ({vl}, {vu})")
-        if batched:
-            raise ValueError(
-                "select='v' supports single problems only (the number of "
-                "eigenvalues in (vl, vu] differs per problem); loop or use "
-                "select='i'")
-        # Two Sturm counts turn the value window into an index window
-        # (one tiny host sync; the sliced solve itself then reuses the
-        # same bucketed executable as any select='i' request).
-        bounds = sturm_count(d[0], e[0], jnp.asarray([vl, vu], d.dtype))
-        c_lo, c_hi = int(bounds[0]), int(bounds[1])
-        if c_hi <= c_lo:
-            return jnp.zeros((0,), d.dtype)
-        il, iu = c_lo, c_hi - 1
-    else:
-        raise ValueError(f"select must be 'i' or 'v', got {select!r}")
-
-    from repro.core import plan as _plan  # deferred: plan imports core
-    p = _plan.make_range_plan(n, iu - il + 1, B, maxiter=maxiter,
-                              polish=polish, dtype=d.dtype)
-    lam = p.execute(d, e, il, iu - il + 1)
-    return lam if batched else lam[0]
+        knobs["dtype"] = dtype
+    req = SolveRequest(d=d, e=e, kind="range", select=select, il=il, iu=iu,
+                       vl=vl, vu=vu, knobs=knobs)
+    return execute_request(req).eigenvalues

@@ -23,6 +23,49 @@ import contextlib
 import threading
 
 
+class LatencyRecorder:
+    """Thread-safe bounded sample buffer with percentile readout.
+
+    The serving layer records one sample per request (submit -> demux)
+    and per flush; ``percentile`` uses the nearest-rank convention on a
+    sorted copy, so p50/p99 match what a load generator would report.
+    Bounded (drops oldest beyond ``maxlen``) so a long-lived service
+    never grows its metrics without bound.
+    """
+
+    def __init__(self, maxlen: int = 4096):
+        self._lock = threading.Lock()
+        self._maxlen = maxlen
+        self._samples: list[float] = []
+        self._count = 0
+
+    def record(self, value: float) -> None:
+        with self._lock:
+            self._count += 1
+            self._samples.append(float(value))
+            if len(self._samples) > self._maxlen:
+                del self._samples[: len(self._samples) - self._maxlen]
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile (q in [0, 100]) of the retained
+        samples; 0.0 when nothing was recorded."""
+        with self._lock:
+            if not self._samples:
+                return 0.0
+            s = sorted(self._samples)
+        rank = max(1, int(-(-q * len(s) // 100)))  # ceil(q/100 * N)
+        return s[min(rank, len(s)) - 1]
+
+    def snapshot(self) -> dict:
+        return {"count": self.count, "p50": self.percentile(50),
+                "p99": self.percentile(99)}
+
+
 class CounterWindow:
     """A read-only view of a :class:`SolveCounter` since a start mark."""
 

@@ -39,6 +39,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import time
 from typing import NamedTuple
 
 import jax
@@ -82,6 +83,48 @@ def batch_bucket(batch: int) -> int:
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
     return 1 << (batch - 1).bit_length()
+
+
+def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
+                        niter: int = _sec.DEFAULT_NITER,
+                        use_zhat: bool = True,
+                        return_boundary: bool = False,
+                        tol_factor: float = 8.0,
+                        stream_threshold: int | None = None,
+                        deflate_budget: int | None = None,
+                        resident_threshold: int | None = None,
+                        fused: bool = True, dtype=None) -> PlanKey:
+    """Resolve a full-spectrum request to its bucketed route key -- pure.
+
+    The returned :class:`PlanKey` has every request-determined field
+    concrete (None knobs resolved to backend defaults, n absorbed into
+    its padded size) but the batch axis *unresolved*: ``batch_bucket`` is
+    0 and ``chunk`` is the requested upper bound, both fixed by
+    :func:`plan_for_route` once the launch batch is known.  Two requests
+    with equal route keys are guaranteed to share one compiled executable
+    when coalesced into the same flush -- the grouping invariant the
+    serving scheduler (``repro.serve``) is built on.  Never touches the
+    plan cache.
+    """
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    if dtype is None:
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    if stream_threshold is None:
+        stream_threshold = _merge.default_stream_threshold()
+    if deflate_budget is None:
+        deflate_budget = _merge.DEFAULT_DEFLATE_BUDGET
+    if resident_threshold is None:
+        resident_threshold = _merge.default_resident_threshold()
+    N, _ = _br._tree_shape(n, leaf)
+    return PlanKey(padded_n=N, leaf=leaf, batch_bucket=0,
+                   dtype=jnp.dtype(dtype).name, chunk=int(chunk),
+                   niter=int(niter), use_zhat=use_zhat,
+                   return_boundary=return_boundary,
+                   tol_factor=float(tol_factor),
+                   stream_threshold=int(stream_threshold),
+                   deflate_budget=int(deflate_budget),
+                   resident_threshold=int(resident_threshold), fused=fused)
 
 
 # Elements per streamed secular tile the CPU path aims for (~2 MiB f64):
@@ -181,12 +224,35 @@ class SolvePlan:
     def batch_bucket_size(self) -> int:
         return self.key.batch_bucket
 
-    def execute(self, d, e) -> "_br.BRBatchResult":
+    @property
+    def state_bytes(self) -> int:
+        """Persistent-state byte model for one full-bucket launch.
+
+        B * O(N): inputs (d_pad, e_pad), child spectra (lam) and the r
+        selected rows -- the paper's linear-space bound, scaled by the
+        batch bucket.  Transients (streamed tiles / dense small-K blocks)
+        are excluded; see ``workspace_model`` for those.
+        """
+        r = 3 if self.key.return_boundary else 2
+        itemsize = jnp.dtype(self.key.dtype).itemsize
+        return (3 + r) * self.key.padded_n * self.key.batch_bucket * itemsize
+
+    def execute(self, d, e, orig_n=None) -> "_br.BRBatchResult":
         """Run the plan's cached executor on a (B, n) problem batch.
 
         B may be anything <= the plan's batch bucket (short batches are
         padded with dummy problems and sliced away); n may be anything
         that pads to this plan's N.  Exactly one device launch.
+
+        ``orig_n`` is the mixed-size hook the serving coalescer uses: a
+        (B,) array of *original* problem sizes when the batch rows were
+        host-padded (with decoupled sentinel blocks) to the common width
+        ``n`` before stacking.  It routes each problem's own boundary row
+        ``orig_n[b] - 1`` into the tracked selected-row slot (a traced
+        input -- no retrace), so mixed-n flushes still return correct
+        per-problem (blo, bhi); eigenvalue demux (slicing row b to
+        ``orig_n[b]``) is the caller's job since rows here keep the
+        common width.
         """
         key = self.key
         dtype = jnp.dtype(key.dtype)
@@ -203,6 +269,12 @@ class SolvePlan:
                 f"n={n} pads to {_br._tree_shape(n, key.leaf)[0]}, but this "
                 f"plan was built for padded N={key.padded_n}")
 
+        if orig_n is not None:
+            orig_n = jnp.asarray(orig_n, jnp.int32)
+            if orig_n.shape != (B,):
+                raise ValueError(
+                    f"orig_n must have shape ({B},), got {orig_n.shape}")
+
         if B < Bb:
             # Dummy problems: zero diagonals decouple exactly and cost one
             # deflated pass-through per merge; sliced off below.
@@ -213,9 +285,17 @@ class SolvePlan:
         d_pad, e_pad, N, L = _br._pad_problem(d, e, key.leaf)
         # The tracked third row slot is only needed when padding appends
         # sentinel rows below row n-1; unpadded problems (n == N) already
-        # carry that row as the bhi slot, so they run with r == 2.
-        track = (jnp.full((Bb,), n - 1, jnp.int32)
-                 if key.return_boundary and n != N else None)
+        # carry that row as the bhi slot, so they run with r == 2.  With
+        # per-problem original sizes the track slot always runs (some
+        # problems may be host-padded even when n == N) and each problem
+        # follows its own row orig_n[b] - 1.
+        if key.return_boundary and orig_n is not None:
+            track = jnp.concatenate(
+                [orig_n - 1, jnp.full((Bb - B,), n - 1, jnp.int32)])
+        elif key.return_boundary and n != N:
+            track = jnp.full((Bb,), n - 1, jnp.int32)
+        else:
+            track = None
 
         sharding = _batch_sharding(Bb)
         if sharding is not None:
@@ -299,7 +379,16 @@ class RangePlan:
     def k_bucket_size(self) -> int:
         return self.key.k_bucket
 
-    def execute(self, d, e, il: int, k: int | None = None):
+    @property
+    def state_bytes(self) -> int:
+        """Persistent-state byte model for one full-bucket launch:
+        B * (2n inputs + 4k bracket state (lo, hi, lam, count)) -- the
+        O(B * (n + k)) memory the sliced front end advertises."""
+        key = self.key
+        itemsize = jnp.dtype(key.dtype).itemsize
+        return key.batch_bucket * (2 * key.n + 4 * key.k_bucket) * itemsize
+
+    def execute(self, d, e, il, k: int | None = None):
         """Eigenvalues [il, il + k) of each problem in a (B, n) batch.
 
         B may be anything <= the plan's batch bucket; the slice may start
@@ -308,6 +397,13 @@ class RangePlan:
         problems and short slices pad by clamping the target indices to
         n-1 (duplicate roots, sliced away).  Exactly one device launch.
         Returns (B, k).
+
+        ``il`` may also be a (B,) integer array -- the serving
+        coalescer's mixed-window hook: each problem slices its own
+        [il[b], il[b] + k) window inside one launch (targets are traced,
+        so this shares the same executable).  Per-problem windows
+        narrower than ``k`` clamp their tail targets to n-1; the caller
+        slices each row to its own width.
         """
         key = self.key
         dtype = jnp.dtype(key.dtype)
@@ -325,17 +421,31 @@ class RangePlan:
         if not (1 <= k <= key.k_bucket):
             raise ValueError(
                 f"slice width {k} exceeds plan k bucket {key.k_bucket}")
-        il = int(il)
-        if not (0 <= il and il + k <= n):
-            raise ValueError(f"slice [{il}, {il + k}) out of range for n={n}")
+        il = np.asarray(il, np.int64)
+        if il.ndim == 0:
+            ilv = int(il)
+            if not (0 <= ilv and ilv + k <= n):
+                raise ValueError(
+                    f"slice [{ilv}, {ilv + k}) out of range for n={n}")
+            il = np.full((B,), ilv, np.int64)
+        else:
+            if il.shape != (B,):
+                raise ValueError(
+                    f"per-problem il must have shape ({B},), got {il.shape}")
+            if il.min() < 0 or il.max() >= n:
+                raise ValueError(
+                    f"per-problem il must lie in [0, {n}); got "
+                    f"[{il.min()}, {il.max()}]")
 
         if B < Bb:
             d = jnp.concatenate([d, jnp.zeros((Bb - B, n), dtype)], axis=0)
             e = jnp.concatenate(
                 [e, jnp.zeros((Bb - B, max(n - 1, 0)), dtype)], axis=0)
-        targets = jnp.minimum(il + jnp.arange(key.k_bucket, dtype=jnp.int32),
-                              n - 1)
-        targets = jnp.broadcast_to(targets[None, :], (Bb, key.k_bucket))
+        il_full = jnp.zeros((Bb,), jnp.int32).at[:B].set(
+            jnp.asarray(il, jnp.int32))
+        targets = jnp.minimum(
+            il_full[:, None] + jnp.arange(key.k_bucket, dtype=jnp.int32)[None, :],
+            n - 1)
 
         lam = _range_executor(d, e, targets, maxiter=key.maxiter,
                               polish=key.polish)
@@ -362,28 +472,33 @@ def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
     absorbed into its padded ``leaf * 2^L`` size, so the cache stays a
     handful of entries under arbitrary traffic.  The returned plan is
     shared and immutable; ``plan.execute(d, e)`` is the only entry point
-    that launches work.
+    that launches work.  Route resolution and plan construction are the
+    same two steps the serving scheduler performs -- this is literally
+    ``plan_for_route(resolve_solve_route(...), batch)``.
     """
-    if n < 1:
-        raise ValueError(f"n must be >= 1, got {n}")
-    if dtype is None:
-        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
-    if stream_threshold is None:
-        stream_threshold = _merge.default_stream_threshold()
-    if deflate_budget is None:
-        deflate_budget = _merge.DEFAULT_DEFLATE_BUDGET
-    if resident_threshold is None:
-        resident_threshold = _merge.default_resident_threshold()
+    route = resolve_solve_route(
+        n, leaf=leaf, chunk=chunk, niter=niter, use_zhat=use_zhat,
+        return_boundary=return_boundary, tol_factor=tol_factor,
+        stream_threshold=stream_threshold, deflate_budget=deflate_budget,
+        resident_threshold=resident_threshold, fused=fused, dtype=dtype)
+    return plan_for_route(route, batch)
+
+
+def plan_for_route(route: PlanKey, batch: int = 1) -> SolvePlan:
+    """Fix a route key's batch axis and build (or fetch) its SolvePlan.
+
+    ``route`` comes from :func:`resolve_solve_route` (batch_bucket == 0,
+    chunk == requested upper bound); ``batch`` is the actual launch batch,
+    rounded up to its power-of-two bucket here.  This is the plan-cache
+    entry point shared by the sync API and the serving scheduler's flush
+    path, so coalesced and one-shot traffic hit the same cache entries.
+    """
     bucket = batch_bucket(batch)
-    N, L = _br._tree_shape(n, leaf)
-    chunk = _resolve_chunk(chunk, bucket, N)
-    key = PlanKey(padded_n=N, leaf=leaf, batch_bucket=bucket,
-                  dtype=jnp.dtype(dtype).name, chunk=chunk, niter=niter,
-                  use_zhat=use_zhat, return_boundary=return_boundary,
-                  tol_factor=float(tol_factor),
-                  stream_threshold=int(stream_threshold),
-                  deflate_budget=int(deflate_budget),
-                  resident_threshold=int(resident_threshold), fused=fused)
+    key = route._replace(batch_bucket=bucket,
+                         chunk=_resolve_chunk(route.chunk, bucket,
+                                              route.padded_n))
+    N, leaf = key.padded_n, key.leaf
+    L = (N // leaf).bit_length() - 1
     with _PLAN_LOCK:
         plan = _PLAN_CACHE.get(key)
         if plan is not None:
@@ -395,11 +510,36 @@ def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
             M = leaf * (1 << level)
             nm = N // (2 * M)
             coupling.append(tuple((2 * i + 1) * M for i in range(nm)))
-        slots = ("blo", "bhi") + (("track",) if return_boundary else ())
+        slots = ("blo", "bhi") + (("track",) if key.return_boundary else ())
         plan = SolvePlan(key=key, levels=L, coupling_index=tuple(coupling),
                          track_slots=slots)
         _PLAN_CACHE[key] = plan
         return plan
+
+
+def resolve_range_route(n: int, k: int, *, maxiter: int | None = None,
+                        polish: int | None = None,
+                        dtype=None) -> RangePlanKey:
+    """Resolve a sliced-solve request to its bucketed route key -- pure.
+
+    Mirrors :func:`resolve_solve_route`: the returned key is fully
+    concrete except for the batch axis (``batch_bucket`` == 0, fixed by
+    :func:`range_plan_for_route`).  Never touches the plan cache.
+    """
+    from repro.core import bisect as _bis  # deferred: bisect imports plan
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    if not (1 <= k <= n):
+        raise ValueError(f"k must be in [1, n]; got k={k}, n={n}")
+    if dtype is None:
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    if maxiter is None:
+        maxiter = _bis.DEFAULT_MAX_BISECT
+    if polish is None:
+        polish = _bis.DEFAULT_POLISH
+    return RangePlanKey(n=n, k_bucket=min(batch_bucket(k), n),
+                        batch_bucket=0, dtype=jnp.dtype(dtype).name,
+                        maxiter=int(maxiter), polish=int(polish))
 
 
 def make_range_plan(n: int, k: int, batch: int = 1, *,
@@ -413,21 +553,14 @@ def make_range_plan(n: int, k: int, batch: int = 1, *,
     compiled executables (``plan_cache_stats()`` exposes the range-cache
     hits/misses/traces next to the full-spectrum ones).
     """
-    from repro.core import bisect as _bis  # deferred: bisect imports plan
-    if n < 1:
-        raise ValueError(f"n must be >= 1, got {n}")
-    if not (1 <= k <= n):
-        raise ValueError(f"k must be in [1, n]; got k={k}, n={n}")
-    if dtype is None:
-        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
-    if maxiter is None:
-        maxiter = _bis.DEFAULT_MAX_BISECT
-    if polish is None:
-        polish = _bis.DEFAULT_POLISH
-    key = RangePlanKey(n=n, k_bucket=min(batch_bucket(k), n),
-                       batch_bucket=batch_bucket(batch),
-                       dtype=jnp.dtype(dtype).name,
-                       maxiter=int(maxiter), polish=int(polish))
+    return range_plan_for_route(
+        resolve_range_route(n, k, maxiter=maxiter, polish=polish,
+                            dtype=dtype), batch)
+
+
+def range_plan_for_route(route: RangePlanKey, batch: int = 1) -> RangePlan:
+    """Fix a range route key's batch axis and build (or fetch) its plan."""
+    key = route._replace(batch_bucket=batch_bucket(batch))
     with _PLAN_LOCK:
         plan = _RANGE_CACHE.get(key)
         if plan is not None:
@@ -440,21 +573,118 @@ def make_range_plan(n: int, k: int, batch: int = 1, *,
 
 
 def plan_cache_stats() -> dict:
-    """Plan-cache observability: size/hits/misses + executor trace count."""
+    """Plan-cache observability: size/hits/misses, executor trace counts,
+    and the per-kind persistent-state byte budgets (sum of each cached
+    plan's ``state_bytes`` model -- what a simultaneous full-bucket launch
+    of every cached executable would hold resident)."""
     with _PLAN_LOCK:
         return {"size": len(_PLAN_CACHE), "hits": _STATS["hits"],
                 "misses": _STATS["misses"],
                 "executor_traces": EXECUTOR_TRACES.count,
+                "state_bytes": sum(p.state_bytes
+                                   for p in _PLAN_CACHE.values()),
                 "range_size": len(_RANGE_CACHE),
                 "range_hits": _STATS["range_hits"],
                 "range_misses": _STATS["range_misses"],
-                "range_executor_traces": RANGE_EXECUTOR_TRACES.count}
+                "range_executor_traces": RANGE_EXECUTOR_TRACES.count,
+                "range_state_bytes": sum(p.state_bytes
+                                         for p in _RANGE_CACHE.values())}
 
 
 def clear_plan_cache() -> None:
-    """Drop cached plans (compiled executables stay in jax's jit cache)."""
+    """Drop cached plans and zero every cache statistic.
+
+    Also resets the EXECUTOR_TRACES / RANGE_EXECUTOR_TRACES counters so a
+    fresh measurement window after a clear starts from zero -- without
+    this, no-retrace assertions (and the serving scheduler's steady-state
+    monitoring) would race on counts left over from earlier traffic.
+    Compiled executables stay in jax's jit cache: clearing is a
+    bookkeeping reset, not a recompile.
+    """
     with _PLAN_LOCK:
         _PLAN_CACHE.clear()
         _RANGE_CACHE.clear()
         for k in _STATS:
             _STATS[k] = 0
+        EXECUTOR_TRACES.reset()
+        RANGE_EXECUTOR_TRACES.reset()
+
+
+# Workload-spec kind aliases accepted by ``prewarm``; "solve" is the
+# stacked ("batch") form.  Kinds matter: each resolves through the same
+# routing rules its real traffic will use ("full" carries the single-API
+# L == 0 boundary-rows rule, "slq" always has boundary rows), so the
+# compiled executable is exactly the one the first request needs.
+_PREWARM_KIND_ALIASES = {"solve": "batch", "batch": "batch", "full": "full",
+                         "slq": "slq"}
+
+
+def prewarm(workload_spec) -> dict:
+    """Compile executables for an expected workload before traffic hits.
+
+    ``workload_spec`` is an iterable of dict entries::
+
+        {"kind": "solve", "n": 1024, "batch": 64, **make_plan knobs}
+        {"kind": "full",  "n": 16}                  # single-problem API
+        {"kind": "slq",   "n": 64, "batch": 8, "leaf": 8}
+        {"kind": "range", "n": 4096, "k": 32, "batch": 8, **knobs}
+
+    Each entry is routed exactly like a real request of that kind
+    (``repro.core.request.route_request`` -- one source of truth for key
+    resolution), its plan is built, and one throwaway full-bucket execute
+    on trivial problems compiles the XLA executable -- after ``prewarm``
+    a cold service serves its first same-shaped request with zero traces
+    (assert via ``plan_cache_stats()``).  Boundary-row plans execute with
+    the per-problem ``orig_n`` track input, matching the serving flush
+    form.  The throwaway solves do tick SOLVE_COUNTER.
+    Returns ``{"plans": P, "seconds": s, "traces": t}``.
+    """
+    from repro.core.request import SolveRequest, route_request
+    t0 = time.perf_counter()
+    t_start = EXECUTOR_TRACES.count + RANGE_EXECUTOR_TRACES.count
+    plans = 0
+    for spec in workload_spec:
+        spec = dict(spec)
+        kind = spec.pop("kind", "solve")
+        n = int(spec.pop("n"))
+        batch = int(spec.pop("batch", 1))
+        if kind in _PREWARM_KIND_ALIASES:
+            req_kind = _PREWARM_KIND_ALIASES[kind]
+            dtype = spec.get("dtype")
+            if dtype is None:
+                dtype = (jnp.float64 if jax.config.jax_enable_x64
+                         else jnp.float32)
+            d = np.zeros((n,) if req_kind == "full" else (batch, n),
+                         jnp.dtype(dtype))
+            e = np.zeros(d.shape[:-1] + (max(n - 1, 0),), d.dtype)
+            routed = route_request(SolveRequest(
+                d=d, e=e, kind=req_kind,
+                return_boundary=bool(spec.pop("return_boundary", False)),
+                knobs=spec))
+            if routed.route is not None:   # n == 1 short circuits: no plan
+                plan = plan_for_route(routed.route, batch)
+                d2 = np.zeros((batch, n), d.dtype)
+                e2 = np.zeros((batch, max(n - 1, 0)), d.dtype)
+                # Serve flushes pass per-problem orig_n (a distinct traced
+                # signature when boundary rows are on); "full" mirrors the
+                # single-problem sync execution instead.
+                orig_n = (np.full((batch,), n, np.int32)
+                          if plan.key.return_boundary and req_kind != "full"
+                          else None)
+                jax.block_until_ready(plan.execute(d2, e2, orig_n=orig_n)
+                                      .eigenvalues)
+        elif kind == "range":
+            k = int(spec.pop("k"))
+            plan = make_range_plan(n, k, batch, **spec)
+            dtype = jnp.dtype(plan.key.dtype)
+            d = jnp.zeros((batch, n), dtype)
+            e = jnp.zeros((batch, max(n - 1, 0)), dtype)
+            jax.block_until_ready(plan.execute(d, e, 0, k))
+        else:
+            raise ValueError(
+                f"unknown prewarm kind {kind!r}; use one of "
+                f"{tuple(_PREWARM_KIND_ALIASES) + ('range',)}")
+        plans += 1
+    return {"plans": plans, "seconds": time.perf_counter() - t0,
+            "traces": EXECUTOR_TRACES.count + RANGE_EXECUTOR_TRACES.count
+            - t_start}

@@ -1,0 +1,316 @@
+"""Request/response core: every eigensolve is a routable SolveRequest.
+
+The sync API (``repro.core.api``), the serving layer (``repro.serve``)
+and SLQ all funnel through this module.  A request is normalized and
+validated once, *routed* to the bucketed compile-cache key its launch
+will use (a :class:`~repro.core.plan.PlanKey` or
+:class:`~repro.core.plan.RangePlanKey` with the batch axis unresolved),
+and executed by exactly one code path:
+
+    SolveRequest -> route_request -> RoutedRequest -> execute_request
+
+Routing is pure (no cache mutation, no device work except the two Sturm
+counts a ``select="v"`` window needs) and total: requests that cannot
+share a compiled executable -- the quadratic-state baselines, the n == 1
+short circuits -- route to ``None`` and execute directly.  Everything
+else carries the key the serving scheduler groups on: two requests with
+equal route keys are guaranteed to coalesce into one device launch, and
+:func:`execute_request` on a routed request is bit-for-bit the solve the
+service performs for it (the property ``tests/test_serve.py`` pins).
+
+Request kinds:
+
+    full   -- one problem, all eigenvalues            -> (n,)
+    batch  -- B stacked problems, all eigenvalues     -> (B, n)
+    range  -- selected eigenvalues by index or value  -> (k,) / (B, k)
+    slq    -- batch + boundary rows (the SLQ quadrature rule: nodes are
+              the eigenvalues, weights are blo(Q)^2)  -> (B, n) + rows
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+KINDS = ("full", "batch", "range", "slq")
+
+METHODS = ("br", "sterf", "lazy", "full", "eigh", "bisect")
+
+# Methods whose solves route through a bucketed plan cache and can
+# therefore coalesce; the rest exist to model quadratic-state baselines
+# and execute one problem at a time.
+_PLANNED_METHODS = ("br", "bisect")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One eigensolve, as data.  ``knobs`` holds the solver keywords of
+    the matching sync entry point (leaf, chunk, niter, ... for "br";
+    maxiter, polish for "bisect"/range; dtype for any)."""
+    d: Any
+    e: Any
+    kind: str = "full"
+    method: str = "br"
+    return_boundary: bool = False
+    select: str = "i"
+    il: int | None = None
+    iu: int | None = None
+    vl: float | None = None
+    vu: float | None = None
+    knobs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    """What comes back: eigenvalues in the kind's natural shape, plus
+    boundary rows when the request asked for them."""
+    eigenvalues: Any
+    blo: Any = None
+    bhi: Any = None
+    kind: str = "full"
+    method: str = "br"
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutedRequest:
+    """A validated request bound to its route.
+
+    ``d``/``e`` are normalized to stacked (B, n)/(B, n-1) arrays of the
+    solve dtype; ``route`` is the batch-unresolved PlanKey/RangePlanKey
+    (None: direct execution, uncoalescable).  Range routes carry the
+    resolved index window (select="v" is turned into indices here, so the
+    scheduler never sees values).  ``empty`` marks a value window that
+    contains no eigenvalues -- nothing to launch.
+    """
+    request: SolveRequest
+    d: Any
+    e: Any
+    batch: int
+    n: int
+    route: Any
+    il: int = 0
+    k: int = 0
+    empty: bool = False
+    single: bool = False   # caller passed 1-D arrays: unwrap on the way out
+
+    @property
+    def return_boundary(self) -> bool:
+        return bool(getattr(self.route, "return_boundary", False))
+
+
+def _as_host(x):
+    """asarray that never moves data: jax arrays stay on device (the sync
+    path's inputs usually already live there), everything else becomes
+    numpy -- so service submissions of host data cost no device round
+    trip until their flush stages the coalesced batch."""
+    import jax
+    return x if isinstance(x, jax.Array) else np.asarray(x)
+
+
+def _normalize(req: SolveRequest):
+    """Validate kind/method and normalize d, e to stacked (B, n) arrays."""
+    if req.kind not in KINDS:
+        raise ValueError(f"unknown kind {req.kind!r}; choose from {KINDS}")
+    if req.method not in METHODS:
+        raise ValueError(
+            f"unknown method {req.method!r}; choose from {METHODS}")
+    d = _as_host(req.d)
+    e = _as_host(req.e)
+    dtype = req.knobs.get("dtype")
+    if dtype is not None:
+        d = d.astype(dtype)
+        e = e.astype(dtype)
+    if e.dtype != d.dtype:
+        e = e.astype(d.dtype)
+    single = d.ndim == 1
+    if req.kind == "full" and not single:
+        raise ValueError(
+            f"kind='full' expects 1-D d, got shape {d.shape}")
+    if req.kind in ("batch", "slq") and single:
+        raise ValueError(
+            f"kind={req.kind!r} expects stacked (B, n) d, got 1-D")
+    if single:
+        d = d[None, :]
+        e = e[None, :] if e.ndim == 1 else e
+    # Same contract (and message) as br_dc._as_batch, without forcing a
+    # device transfer at submit time.
+    if (d.ndim != 2 or e.ndim != 2 or e.shape[0] != d.shape[0]
+            or e.shape[1] != max(d.shape[1] - 1, 0)):
+        raise ValueError(
+            f"batched solve expects d (B, n) and e (B, n-1); "
+            f"got {d.shape} / {e.shape}")
+    return d, e, single
+
+
+def _solve_knobs(req: SolveRequest) -> dict:
+    kw = {k: v for k, v in req.knobs.items() if k != "return_boundary"}
+    return kw
+
+
+def route_request(req: SolveRequest) -> RoutedRequest:
+    """Resolve a request to its (batch-unresolved) compile-cache key.
+
+    Pure with respect to the plan cache; raises on malformed requests --
+    the serving scheduler turns that into a failed future without
+    touching flushmates.
+    """
+    from repro.core import plan as _plan
+    d, e, single = _normalize(req)
+    B, n = d.shape
+    kw = _solve_knobs(req)
+
+    if req.method != "br" and (req.return_boundary or req.kind == "slq"):
+        # Boundary rows are BR selected-row state; silently returning a
+        # result without them would let a caller believe the flag took
+        # effect (the old per-method signatures raised TypeError too).
+        raise TypeError(
+            "return_boundary (and kind='slq') require method='br'; "
+            f"got method={req.method!r}")
+
+    if req.kind == "range" or req.method == "bisect":
+        range_kw = {k: v for k, v in kw.items()
+                    if k in ("maxiter", "polish")}
+        unknown = set(kw) - {"maxiter", "polish", "dtype"}
+        if unknown:
+            raise TypeError(
+                f"{'range' if req.kind == 'range' else 'bisect'} requests "
+                f"accept knobs (maxiter, polish, dtype); "
+                f"got unexpected {sorted(unknown)}")
+        if req.kind == "range":
+            il, k, empty = _resolve_window(req, d, e, B, n, single)
+        else:
+            il, k, empty = 0, n, False   # full-spectrum bisect reference
+        route = None
+        if not empty:
+            route = _plan.resolve_range_route(n, k, dtype=d.dtype,
+                                              **range_kw)
+        return RoutedRequest(request=req, d=d, e=e, batch=B, n=n,
+                             route=route, il=il, k=k, empty=empty,
+                             single=single)
+
+    if req.method == "br" and n > 1:
+        return_boundary = req.return_boundary or req.kind == "slq"
+        if req.kind == "full":
+            # Single (possibly padded) leaf trees return their boundary
+            # rows for free -- mirror eigvalsh_tridiagonal_br's contract
+            # that L == 0 always yields (blo, bhi).
+            from repro.core.br_dc import _tree_shape
+            leaf = kw.get("leaf", 32)
+            return_boundary = return_boundary or _tree_shape(n, leaf)[1] == 0
+        route = _plan.resolve_solve_route(
+            n, return_boundary=return_boundary, dtype=d.dtype,
+            **{k: v for k, v in kw.items() if k != "dtype"})
+        return RoutedRequest(request=req, d=d, e=e, batch=B, n=n,
+                             route=route, single=single)
+
+    # Baselines (and the n == 1 short circuits): direct, uncoalescable.
+    return RoutedRequest(request=req, d=d, e=e, batch=B, n=n, route=None,
+                         single=single)
+
+
+def _resolve_window(req: SolveRequest, d, e, B: int, n: int, single: bool):
+    """Turn a range request's selection into an index window (il, k)."""
+    from repro.core.bisect import _validate_index_range, sturm_count
+    if req.select == "i":
+        if req.il is None or req.iu is None:
+            raise ValueError("select='i' requires il and iu")
+        il, iu = _validate_index_range(n, req.il, req.iu)
+        return il, iu - il + 1, False
+    if req.select == "v":
+        if req.vl is None or req.vu is None:
+            raise ValueError("select='v' requires vl and vu")
+        if not (float(req.vl) < float(req.vu)):
+            raise ValueError(
+                f"select='v' requires vl < vu; got ({req.vl}, {req.vu})")
+        if not single:
+            raise ValueError(
+                "select='v' supports single problems only (the number of "
+                "eigenvalues in (vl, vu] differs per problem); loop or "
+                "use select='i'")
+        # Two Sturm counts turn the value window into an index window
+        # (one tiny host sync; the sliced solve then reuses the same
+        # bucketed executables as any select='i' request).
+        bounds = sturm_count(d[0], e[0],
+                             jnp.asarray([req.vl, req.vu], d.dtype))
+        c_lo, c_hi = int(bounds[0]), int(bounds[1])
+        if c_hi <= c_lo:
+            return 0, 0, True
+        return c_lo, c_hi - c_lo, False
+    raise ValueError(f"select must be 'i' or 'v', got {req.select!r}")
+
+
+def _solve_direct_single(d, e, method: str, kw: dict):
+    """One problem through the non-plan paths (moved from core.api)."""
+    from repro.core import baselines as _bl
+    from repro.core.br_dc import eigvalsh_tridiagonal_br
+    from repro.core.sterf import eigvalsh_tridiagonal_sterf
+    if method == "br":
+        res = eigvalsh_tridiagonal_br(d, e, **kw)
+        return res.eigenvalues, res.blo, res.bhi
+    if method == "sterf":
+        return eigvalsh_tridiagonal_sterf(d, e, **kw), None, None
+    if method == "lazy":
+        return _bl.eigvalsh_tridiagonal_lazy(d, e, **kw), None, None
+    if method == "full":
+        return _bl.eigvalsh_tridiagonal_full_discard(d, e, **kw), None, None
+    if method == "eigh":
+        from repro.core.tridiag import dense_from_tridiag
+        return jnp.linalg.eigvalsh(dense_from_tridiag(d, e)), None, None
+    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+
+
+def execute_request(req: SolveRequest | RoutedRequest) -> SolveResult:
+    """Execute a (routed) request synchronously.
+
+    This is the single launch path: the sync API wraps it, and the
+    serving engine's flush is the same plan execution over a coalesced
+    batch -- which is why service results are bit-for-bit the sync ones.
+    """
+    routed = route_request(req) if isinstance(req, SolveRequest) else req
+    req = routed.request
+    single = routed.single
+
+    if routed.empty:
+        lam = jnp.zeros((0,), routed.d.dtype)
+        return SolveResult(eigenvalues=lam if single else lam[None, :],
+                           kind=req.kind, method=req.method)
+
+    from repro.core import plan as _plan
+    if isinstance(routed.route, _plan.PlanKey):
+        plan = _plan.plan_for_route(routed.route, routed.batch)
+        res = plan.execute(routed.d, routed.e)
+        if single:
+            return SolveResult(
+                eigenvalues=res.eigenvalues[0],
+                blo=None if res.blo is None else res.blo[0],
+                bhi=None if res.bhi is None else res.bhi[0],
+                kind=req.kind, method=req.method)
+        return SolveResult(eigenvalues=res.eigenvalues, blo=res.blo,
+                           bhi=res.bhi, kind=req.kind, method=req.method)
+    if isinstance(routed.route, _plan.RangePlanKey):
+        plan = _plan.range_plan_for_route(routed.route, routed.batch)
+        lam = plan.execute(routed.d, routed.e, routed.il, routed.k)
+        return SolveResult(eigenvalues=lam[0] if single else lam,
+                           kind=req.kind, method=req.method)
+
+    # Direct path: baselines and n == 1 short circuits, one problem at a
+    # time (these methods exist to model per-problem quadratic state).
+    kw = _solve_knobs(req)
+    if req.return_boundary and req.method == "br":
+        kw["return_boundary"] = True
+    outs = [_solve_direct_single(routed.d[b], routed.e[b], req.method, kw)
+            for b in range(routed.batch)]
+    lam = jnp.stack([o[0] for o in outs])
+    blo = (jnp.stack([o[1] for o in outs])
+           if outs and outs[0][1] is not None else None)
+    bhi = (jnp.stack([o[2] for o in outs])
+           if outs and outs[0][2] is not None else None)
+    if single:
+        lam = lam[0]
+        blo = None if blo is None else blo[0]
+        bhi = None if bhi is None else bhi[0]
+    return SolveResult(eigenvalues=lam, blo=blo, bhi=bhi, kind=req.kind,
+                       method=req.method)

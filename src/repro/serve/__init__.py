@@ -1,0 +1,27 @@
+"""Eigensolver-as-a-service: a coalescing micro-batch front end over the
+plan/executor core.
+
+Request lifecycle: ``submit -> route -> coalesce -> flush -> demux``.
+Concurrent requests are routed to their bucketed compile-cache keys
+(``repro.core.request``), grouped per key by the
+:class:`CoalescingScheduler`, launched as shared batched solves by the
+:class:`ServeEngine` (double-buffered staging, watchdog heartbeats,
+straggler monitoring, transient-error retry, poisoned-request
+isolation), and demuxed back onto per-request futures -- bit-for-bit the
+sync API's answers, at coalesced throughput.
+"""
+
+from repro.core.request import (KINDS, METHODS, SolveRequest, SolveResult,
+                                execute_request, route_request)
+from repro.serve.client import EigensolverClient
+from repro.serve.engine import ServeEngine
+from repro.serve.metrics import ServeMetrics, bucket_label
+from repro.serve.scheduler import (CoalescingScheduler, PendingRequest,
+                                   QueueFull, SchedulerClosed, ServeConfig)
+
+__all__ = [
+    "CoalescingScheduler", "EigensolverClient", "KINDS", "METHODS",
+    "PendingRequest", "QueueFull", "SchedulerClosed", "ServeConfig",
+    "ServeEngine", "ServeMetrics", "SolveRequest", "SolveResult",
+    "bucket_label", "execute_request", "route_request",
+]

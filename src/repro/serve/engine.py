@@ -1,0 +1,407 @@
+"""Serving engine: the worker loop that turns flush batches into device
+launches and demuxes results back onto request futures.
+
+One daemon thread owns the device:
+
+    next_flush -> stage (host pack + pad) -> launch (async dispatch)
+               -> [stage/launch the NEXT flush]  -> finish (wait + demux)
+
+Staging and launching of flush i+1 overlap the device execution of flush
+i (double buffering): JAX dispatch is asynchronous, so ``_launch``
+returns as soon as the work is enqueued and ``_finish`` blocks on the
+previous flush's arrays only after the next one is already in flight.
+
+Mixed-n solve flushes are host-padded to the group's common padded width
+with ``_host_pad`` -- a numpy mirror of ``br_dc._pad_problem``'s
+decoupled-sentinel construction (kept bitwise identical; pinned by
+tests), so every problem's padded rows are exactly the rows its sync
+solve would have produced internally and service results stay bit-for-bit
+equal to the sync API.  Each problem's own boundary row rides the traced
+track slot (``SolvePlan.execute(orig_n=...)``).
+
+Reliability comes from the ``repro.runtime`` substrate: a
+:class:`~repro.runtime.watchdog.Watchdog` heartbeats once per flush, a
+per-bucket :class:`~repro.runtime.straggler.StragglerMonitor` flags slow
+flushes against the bucket's own timing baseline, and
+:func:`~repro.runtime.retry.retry_transient` retries transient device
+errors.  A flush that still fails falls back to solving its requests one
+by one, so a poisoned request fails alone and its flushmates complete.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+from concurrent.futures import InvalidStateError
+
+import jax
+import numpy as np
+
+from repro.core import plan as _plan
+from repro.core.request import SolveResult, execute_request
+from repro.runtime import StragglerMonitor, Watchdog, retry_transient
+from repro.runtime.retry import TRANSIENT_DEFAULT
+from repro.serve.metrics import ServeMetrics, bucket_label
+from repro.serve.scheduler import CoalescingScheduler, ServeConfig
+
+
+def _resolve_future(future, result=None, exc=None) -> None:
+    """Resolve a request future, tolerating callers that cancelled (or a
+    fallback re-resolving members a partial demux already set): an
+    InvalidStateError here must never escape into the worker loop -- a
+    dead engine thread would hang every subsequent request forever."""
+    try:
+        if future.done():
+            return
+        if exc is not None:
+            future.set_exception(exc)
+        else:
+            future.set_result(result)
+    except InvalidStateError:
+        pass
+
+
+def _host_pad(d: np.ndarray, e: np.ndarray, N: int):
+    """Pad (B, n) problems to width N with decoupled sentinel blocks.
+
+    Bitwise mirror of ``br_dc._pad_problem`` (numpy instead of jnp so
+    staging costs no device dispatches): sentinel diagonal entries sit
+    above each problem's own Gershgorin bound, couplings into the padded
+    region are exactly zero.  Returns (d_pad (B, N), e_pad (B, N-1)).
+    """
+    B, n = d.shape
+    if n == N:
+        return d, e
+    emax = (np.max(np.abs(e), axis=1) if e.shape[1]
+            else np.zeros((B,), d.dtype))
+    sentinel = np.max(np.abs(d), axis=1) + 2.0 * emax + 1.0
+    d_pad = np.concatenate(
+        [d, np.broadcast_to(sentinel[:, None], (B, N - n)).astype(d.dtype)],
+        axis=1)
+    e_pad = np.concatenate([e, np.zeros((B, N - n), d.dtype)], axis=1)
+    return d_pad, e_pad
+
+
+def _flush_ready(flush: "_Flush") -> bool:
+    """True when finishing the flush would not block (device done or the
+    flush already failed); conservative True for results that are not
+    lazy jax arrays (direct-path SolveResults may hold numpy)."""
+    if flush.error is not None:
+        return True
+    obj = getattr(flush.result, "eigenvalues", flush.result)
+    is_ready = getattr(obj, "is_ready", None)
+    return True if is_ready is None else bool(is_ready())
+
+
+class _Flush:
+    """One staged flush: the launch inputs plus everything needed to
+    demux device outputs back onto the member requests."""
+    __slots__ = ("batch", "route", "label", "result", "error", "t_launch")
+
+    def __init__(self, batch, route, label):
+        self.batch = batch
+        self.route = route
+        self.label = label
+        self.result = None
+        self.error: BaseException | None = None
+        self.t_launch = 0.0
+
+
+class ServeEngine:
+    """Owns the worker thread, the watchdog, and per-bucket monitors."""
+
+    def __init__(self, scheduler: CoalescingScheduler,
+                 config: ServeConfig | None = None,
+                 metrics: ServeMetrics | None = None):
+        self.scheduler = scheduler
+        self.config = config or scheduler.config
+        self.metrics = metrics or scheduler.metrics
+        hb = self.config.heartbeat_path or os.path.join(
+            tempfile.gettempdir(), f"repro-serve-heartbeat-{os.getpid()}.json")
+        self._watchdog = Watchdog(hb, timeout_s=self.config.watchdog_timeout_s)
+        self._stragglers: dict[str, StragglerMonitor] = {}
+        self._thread: threading.Thread | None = None
+        self._flush_index = 0
+        self._last_beat = 0.0
+        self._beat_warned = False
+
+    # ---------------------------------------------------------- lifecycle
+
+    def start(self) -> "ServeEngine":
+        if self._thread is None:
+            self._watchdog.start()
+            self._thread = threading.Thread(
+                target=self._loop, name="repro-serve-engine", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queue (the scheduler is closed first) and join."""
+        self.scheduler.close()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._watchdog.stop()
+
+    # --------------------------------------------------------------- loop
+
+    def _loop(self) -> None:
+        inflight: _Flush | None = None
+        while True:
+            if (inflight is None and self.scheduler.closed
+                    and self.scheduler.pending_problems() == 0):
+                return
+            try:
+                inflight = self._loop_once(inflight)
+            except Exception as exc:
+                # The worker thread must survive ANYTHING -- a dead
+                # engine hangs every queued and future request forever
+                # with zero errors reported.  Resolve whatever flush was
+                # in flight (fallback skips already-done futures) and
+                # keep serving.
+                if inflight is not None:
+                    for p in inflight.batch:
+                        _resolve_future(p.future, exc=exc)
+                    inflight = None
+                else:
+                    # Nothing to fail -- but never drop the evidence.
+                    print(f"[serve] engine loop error (no flush in "
+                          f"flight): {exc!r}", flush=True)
+
+    def _loop_once(self, inflight: _Flush | None) -> _Flush | None:
+        # Non-blocking poll while a flush is in flight (so it can be
+        # finished the moment no follow-up work is due); short waits
+        # otherwise to notice close/drain quickly.
+        timeout = 0.0 if inflight is not None else 0.05
+        batch = self.scheduler.next_flush(timeout=timeout)
+        if batch is None:
+            if inflight is not None:
+                self._finish_safely(inflight)
+            else:
+                self._idle_beat()
+            return None
+        if inflight is not None and _flush_ready(inflight):
+            # Device already done: finish first so the flush's timing
+            # (and its waiters' latency) don't absorb the next flush's
+            # staging cost.
+            self._finish_safely(inflight)
+            inflight = None
+        flush = self._stage_and_launch(batch)
+        if inflight is not None:
+            self._finish_safely(inflight)
+        return flush
+
+    def _finish_safely(self, flush: _Flush) -> None:
+        """_finish with a last-resort guard: no matter what the finish
+        bookkeeping does, every member future ends up resolved and the
+        exception never reaches the worker loop with another flush in
+        flight."""
+        try:
+            self._finish(flush)
+        except Exception as exc:
+            flush.error = exc
+            try:
+                self._fallback(flush)
+            except Exception:
+                for p in flush.batch:
+                    _resolve_future(p.future, exc=exc)
+
+    def _idle_beat(self) -> None:
+        """Keep the heartbeat fresh while the service is merely idle --
+        the Watchdog protocol means 'worker thread alive', not 'traffic
+        present', so an external supervisor must not restart a healthy
+        but quiet server."""
+        now = time.monotonic()
+        if now - self._last_beat >= min(30.0,
+                                        self.config.watchdog_timeout_s / 4):
+            self._beat(idle=True)
+
+    def _beat(self, **info) -> None:
+        self._last_beat = time.monotonic()
+        try:
+            self._watchdog.beat(self._flush_index, **info)
+        except OSError as exc:
+            # An unwritable heartbeat path degrades monitoring, never
+            # serving (and must never kill the worker thread).
+            if not self._beat_warned:
+                self._beat_warned = True
+                print(f"[serve] heartbeat write failed ({exc!r}); "
+                      f"watchdog protocol degraded", flush=True)
+
+    # ------------------------------------------------------------- stages
+
+    def _stage_and_launch(self, batch) -> _Flush:
+        """Stage + dispatch one flush; JAX dispatch is async so this
+        returns while the device still computes.  Errors (including any
+        raised at dispatch) are handled in _finish, whose relaunch path
+        owns the transient-retry budget -- execution faults only surface
+        at block_until_ready there, so that is where retrying belongs."""
+        route = batch[0].routed.route
+        flush = _Flush(batch, route, bucket_label(route))
+        flush.t_launch = time.perf_counter()
+        try:
+            flush.result = self._launch(flush)
+        except Exception as exc:   # retried/isolated in _finish
+            flush.error = exc
+        return flush
+
+    def _launch_and_wait(self, flush: _Flush):
+        result = self._launch(flush)
+        jax.block_until_ready(getattr(result, "eigenvalues", result))
+        return result
+
+    def _launch(self, flush: _Flush):
+        route = flush.route
+        if isinstance(route, _plan.PlanKey):
+            return self._launch_solve(flush)
+        if isinstance(route, _plan.RangePlanKey):
+            return self._launch_range(flush)
+        # Direct (uncoalescable) request: the sync path, one launch.
+        return execute_request(flush.batch[0].routed)
+
+    def _launch_solve(self, flush: _Flush):
+        route = flush.route
+        N = route.padded_n
+        ds, es, orig_n = [], [], []
+        for p in flush.batch:
+            d = np.asarray(p.routed.d)
+            e = np.asarray(p.routed.e)
+            d, e = _host_pad(d, e, N)
+            ds.append(d)
+            es.append(e)
+            orig_n.extend([p.routed.n] * p.routed.batch)
+        d_all = np.concatenate(ds, axis=0)
+        e_all = np.concatenate(es, axis=0)
+        plan = _plan.plan_for_route(route, d_all.shape[0])
+        return plan.execute(d_all, e_all,
+                            orig_n=np.asarray(orig_n, np.int32))
+
+    def _launch_range(self, flush: _Flush):
+        d_all = np.concatenate([np.asarray(p.routed.d)
+                                for p in flush.batch], axis=0)
+        e_all = np.concatenate([np.asarray(p.routed.e)
+                                for p in flush.batch], axis=0)
+        il = np.concatenate([np.full((p.routed.batch,), p.routed.il)
+                             for p in flush.batch])
+        k = max(p.routed.k for p in flush.batch)
+        plan = _plan.range_plan_for_route(flush.route, d_all.shape[0])
+        return plan.execute(d_all, e_all, il, k)
+
+    # ------------------------------------------------------------- finish
+
+    def _finish(self, flush: _Flush) -> None:
+        if flush.error is None:
+            try:
+                jax.block_until_ready(
+                    getattr(flush.result, "eigenvalues", flush.result))
+            except Exception as exc:
+                flush.error = exc
+        if (flush.error is not None and self.config.retries > 0
+                and isinstance(flush.error, TRANSIENT_DEFAULT)):
+            # Transient device faults (preemption, flaky interconnect)
+            # surface either at dispatch or at block_until_ready; give
+            # the whole launch+wait the configured retry budget before
+            # demoting the flush to per-request fallback.  Errors outside
+            # the transient classes (ValueError etc.) skip straight to
+            # fallback -- relaunching a whole coalesced batch on a
+            # deterministic failure would head-of-line block every other
+            # bucket for retries * backoff.
+            self.metrics.record_retry(flush.label)
+            relaunch = retry_transient(
+                self._launch_and_wait, retries=self.config.retries - 1,
+                backoff_s=self.config.retry_backoff_s,
+                on_retry=lambda i, exc: self.metrics.record_retry(
+                    flush.label))
+            try:
+                flush.result = relaunch(flush)
+                flush.error = None
+            except Exception as exc:
+                flush.error = exc
+        if flush.error is not None:
+            self._fallback(flush)
+            return
+        duration = time.perf_counter() - flush.t_launch
+        try:
+            self._demux(flush)
+        except Exception as exc:
+            flush.error = exc
+            self._fallback(flush)
+            return
+        problems = sum(p.problems for p in flush.batch)
+        self.metrics.record_flush(flush.label, len(flush.batch), problems,
+                                  duration)
+        now = time.monotonic()
+        for p in flush.batch:
+            self.metrics.record_latency(flush.label, now - p.submit_t)
+        self._flush_index += 1
+        self._beat(bucket=flush.label, requests=len(flush.batch),
+                   problems=problems)
+        mon = self._stragglers.get(flush.label)
+        if mon is None:
+            mon = self._stragglers[flush.label] = StragglerMonitor(
+                window=self.config.straggler_window,
+                threshold=self.config.straggler_threshold)
+        mon.record(self._flush_index, duration)
+
+    def _demux(self, flush: _Flush) -> None:
+        # One host transfer per flushed output, numpy views per request:
+        # slicing the (possibly device-sharded) batch arrays on device
+        # would dispatch a gather per request -- measurably slower than
+        # the serving win at small n.
+        route = flush.route
+        if isinstance(route, _plan.PlanKey):
+            res = flush.result
+            lam_all = np.asarray(res.eigenvalues)
+            blo_all = None if res.blo is None else np.asarray(res.blo)
+            bhi_all = None if res.bhi is None else np.asarray(res.bhi)
+            off = 0
+            for p in flush.batch:
+                r = p.routed
+                lam = lam_all[off:off + r.batch, :r.n]
+                blo = (None if blo_all is None
+                       else blo_all[off:off + r.batch, :r.n])
+                bhi = (None if bhi_all is None
+                       else bhi_all[off:off + r.batch, :r.n])
+                if r.request.kind == "full":
+                    lam = lam[0]
+                    blo = None if blo is None else blo[0]
+                    bhi = None if bhi is None else bhi[0]
+                _resolve_future(p.future, SolveResult(
+                    eigenvalues=lam, blo=blo, bhi=bhi,
+                    kind=r.request.kind, method=r.request.method))
+                off += r.batch
+        elif isinstance(route, _plan.RangePlanKey):
+            lam_all = np.asarray(flush.result)
+            off = 0
+            for p in flush.batch:
+                r = p.routed
+                lam = lam_all[off:off + r.batch, :r.k]
+                if r.single:
+                    lam = lam[0]
+                _resolve_future(p.future, SolveResult(
+                    eigenvalues=lam, kind=r.request.kind,
+                    method=r.request.method))
+                off += r.batch
+        else:
+            _resolve_future(flush.batch[0].future, flush.result)
+
+    def _fallback(self, flush: _Flush) -> None:
+        """Flush-level failure: isolate it -- re-run each member through
+        the sync path so only genuinely poisoned requests fail."""
+        self.metrics.record_fallback(flush.label)
+        for p in flush.batch:
+            if p.future.done():   # partial demux already resolved it
+                continue
+            try:
+                result = execute_request(p.routed)
+                jax.block_until_ready(result.eigenvalues)
+                _resolve_future(p.future, result)
+                self.metrics.record_latency(flush.label,
+                                            time.monotonic() - p.submit_t)
+            except Exception as exc:
+                self.metrics.record_error(flush.label)
+                _resolve_future(p.future, exc=exc)
+        self._beat(bucket=flush.label, fallback=True,
+                   requests=len(flush.batch))

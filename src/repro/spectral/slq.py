@@ -71,7 +71,8 @@ def _rademacher_like(rng, tree):
 
 
 def slq_spectrum(matvec: Callable, params_like, rng, *, num_probes: int = 4,
-                 num_steps: int = 32, leaf: int = 8) -> SpectralEstimate:
+                 num_steps: int = 32, leaf: int = 8,
+                 client=None) -> SpectralEstimate:
     """Estimate the operator spectrum via SLQ with batched BR as the
     tridiagonal eigensolver (values + boundary rows -> nodes + weights).
 
@@ -80,6 +81,12 @@ def slq_spectrum(matvec: Callable, params_like, rng, *, num_probes: int = 4,
     library's accuracy regime), matching the historical per-probe path.
     ``matvec`` must be jax-traceable (it runs under vmap across probes;
     see :func:`repro.spectral.lanczos.lanczos_tridiag_batch`).
+
+    ``client`` (a :class:`repro.serve.EigensolverClient`) submits the
+    probe set as ONE ``kind="slq"`` service request instead of launching
+    directly: the solve coalesces with whatever other traffic shares the
+    bucket, and the result is bit-for-bit the direct path's (same plan,
+    same executable -- pinned in tests/test_serve.py).
     """
     dim = sum(x.size for x in jax.tree.leaves(params_like))
     probes = [_rademacher_like(jax.random.fold_in(rng, k), params_like)
@@ -88,9 +95,15 @@ def slq_spectrum(matvec: Callable, params_like, rng, *, num_probes: int = 4,
 
     alpha, beta = lanczos_tridiag_batch(matvec, stacked, num_steps)
     solve_dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
-    res = eigvalsh_tridiagonal_batch(
-        alpha.astype(solve_dtype), beta.astype(solve_dtype),
-        leaf=leaf, return_boundary=True)
+    alpha = alpha.astype(solve_dtype)
+    beta = beta.astype(solve_dtype)
+    if client is not None:
+        from repro.core.request import SolveRequest
+        res = client.submit(SolveRequest(
+            d=alpha, e=beta, kind="slq", knobs={"leaf": leaf})).result()
+    else:
+        res = eigvalsh_tridiagonal_batch(alpha, beta, leaf=leaf,
+                                         return_boundary=True)
 
     nodes = np.asarray(res.eigenvalues)          # single host transfer
     weights = np.asarray(res.blo) ** 2           # Gauss weights

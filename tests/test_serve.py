@@ -1,0 +1,413 @@
+"""Serving-layer tests: the coalescing service must be indistinguishable
+from the sync API except for throughput.
+
+The load-bearing assertions:
+
+  * bit-for-bit -- every request kind answered by the service equals the
+    sync API's answer exactly (same route -> same executable -> same
+    bits; mixed-n flushes ride the host-pad + tracked-row machinery);
+  * isolation -- a poisoned request fails alone, flushmates complete;
+  * backpressure -- the bounded queue's high-water mark never exceeds
+    queue_depth;
+  * coalescing -- concurrent same-bucket traffic shares device launches.
+"""
+
+import threading
+import time
+from concurrent.futures import Future
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SOLVE_COUNTER, SolveRequest, clear_plan_cache,
+                        eigvalsh_tridiagonal, eigvalsh_tridiagonal_batch,
+                        eigvalsh_tridiagonal_range, plan_cache_stats,
+                        prewarm)
+from repro.core import br_dc as _br
+from repro.core import plan as _plan
+from repro.core.request import execute_request, route_request
+from repro.serve import (CoalescingScheduler, EigensolverClient, QueueFull,
+                         ServeConfig)
+from repro.serve.engine import _host_pad
+
+
+def _problem(n, seed=0):
+    rng = np.random.default_rng(seed + n)
+    return rng.normal(size=n), rng.normal(size=n - 1)
+
+
+# ---------------------------------------------------------------- routing
+
+
+def test_route_key_equality_is_the_coalescing_invariant():
+    d40, e40 = _problem(40)
+    d64, e64 = _problem(64)
+    r40 = route_request(SolveRequest(d=d40, e=e40))
+    r64 = route_request(SolveRequest(d=d64, e=e64))
+    # Same padded bucket -> same route -> coalescable...
+    assert r40.route == r64.route
+    assert r40.route.batch_bucket == 0  # batch axis left to the flush
+    # ...while knob or shape changes split the route.
+    r_rows = route_request(SolveRequest(d=d64, e=e64, return_boundary=True))
+    assert r_rows.route != r64.route
+    d100, e100 = _problem(100)
+    assert route_request(SolveRequest(d=d100, e=e100)).route != r64.route
+
+
+def test_route_request_is_pure_wrt_plan_cache():
+    clear_plan_cache()
+    d, e = _problem(48)
+    route_request(SolveRequest(d=d, e=e))
+    route_request(SolveRequest(d=d, e=e, kind="range", il=0, iu=3))
+    stats = plan_cache_stats()
+    assert stats["size"] == 0 and stats["range_size"] == 0
+
+
+def test_sync_api_goes_through_request_core():
+    d, e = _problem(48)
+    req = SolveRequest(d=d, e=e)
+    got = execute_request(req).eigenvalues
+    ref = eigvalsh_tridiagonal(d, e)
+    assert jnp.array_equal(got, ref)
+
+
+# ------------------------------------------------------------- host pad
+
+
+def test_host_pad_bitwise_matches_pad_problem():
+    for n in (3, 40, 57):
+        d, e = _problem(n)
+        d2 = np.stack([d, d * 0.5])
+        e2 = np.stack([e, e * 2.0])
+        N, _ = _br._tree_shape(n, 32)
+        dp, ep = _host_pad(d2, e2, N)
+        dref, eref, N2, _ = _br._pad_problem(jnp.asarray(d2),
+                                             jnp.asarray(e2), 32)
+        assert N2 == N
+        assert np.array_equal(dp, np.asarray(dref))
+        # _pad_problem returns e padded to length N for uniform split
+        # indexing; the host form stops at the executor's N-1 input width.
+        assert np.array_equal(ep, np.asarray(eref)[:, : N - 1])
+
+
+# -------------------------------------------------------- service == sync
+
+
+def test_threaded_mixed_requests_bitwise_equal_sync():
+    """N threads x mixed-n/mixed-kind traffic == sequential sync results,
+    bit for bit -- the acceptance criterion of the serving layer."""
+    sizes = (40, 64, 100)
+    cases = []
+    for n in sizes:
+        d, e = _problem(n)
+        cases.append(("full", d, e, {}))
+        cases.append(("range", d, e, {"il": 0, "iu": 5}))
+        cases.append(("range", d, e, {"il": n - 4, "iu": n - 1}))
+    db, eb = _problem(64, seed=7)
+    DB = np.stack([db, 2.0 * db, db - 1.0])
+    EB = np.stack([eb, eb, 0.5 * eb])
+    refs = []
+    for kind, d, e, kw in cases:
+        if kind == "full":
+            refs.append(eigvalsh_tridiagonal(d, e))
+        else:
+            refs.append(eigvalsh_tridiagonal_range(d, e, select="i", **kw))
+    ref_batch = eigvalsh_tridiagonal_batch(DB, EB, return_boundary=True)
+
+    with EigensolverClient(max_batch=8, max_wait_us=20_000) as client:
+        futs = [None] * len(cases)
+
+        def submit(lo, hi):
+            for i in range(lo, hi):
+                kind, d, e, kw = cases[i]
+                if kind == "full":
+                    futs[i] = client.solve_async(d, e)
+                else:
+                    futs[i] = client.solve_range_async(d, e, select="i",
+                                                       **kw)
+        threads = [threading.Thread(target=submit, args=(i, i + 3))
+                   for i in range(0, len(cases), 3)]
+        fb = client.solve_batch_async(DB, EB, return_boundary=True)
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for i, ref in enumerate(refs):
+            got = futs[i].result(timeout=600).eigenvalues
+            assert jnp.array_equal(got, ref), f"case {i} diverged"
+        res = fb.result(timeout=600)
+        assert jnp.array_equal(res.eigenvalues, ref_batch.eigenvalues)
+        assert jnp.array_equal(res.blo, ref_batch.blo)
+        assert jnp.array_equal(res.bhi, ref_batch.bhi)
+        snap = client.metrics()
+        assert sum(b["errors"] for b in snap["buckets"].values()) == 0
+
+
+def test_coalescing_shares_device_launches():
+    d64, e64 = _problem(64)
+    eigvalsh_tridiagonal(d64, e64)  # warm the bucket's executable
+    with EigensolverClient(max_batch=16, max_wait_us=300_000) as client:
+        with SOLVE_COUNTER.measure() as window:
+            futs = [client.solve_async(*_problem(64, seed=s))
+                    for s in range(8)]
+            refs = [eigvalsh_tridiagonal(*_problem(64, seed=s))
+                    for s in range(8)]
+            for f, ref in zip(futs, refs):
+                assert jnp.array_equal(f.result(timeout=600).eigenvalues,
+                                       ref)
+        snap = client.metrics()
+    bucket = snap["buckets"]["solve/N64/float64"]
+    assert bucket["coalesce_factor"] > 1.0
+    assert bucket["flushes"] < bucket["requests"]
+    # The sync refs cost one launch each; the 8 service solves must have
+    # coalesced into fewer launches than requests (8 refs + < 8 flushes).
+    assert window.count < 16
+
+
+def test_slq_through_service_bitwise_equal_direct():
+    from repro.spectral.slq import slq_spectrum
+    A = jnp.asarray(np.random.default_rng(3).normal(size=(24, 24)))
+    A = (A + A.T) / 2
+
+    def matvec(v):
+        return A @ v
+
+    params_like = jnp.zeros((24,))
+    rng = jax.random.PRNGKey(0)
+    direct = slq_spectrum(matvec, params_like, rng, num_probes=3,
+                          num_steps=8)
+    with EigensolverClient(max_wait_us=1000) as client:
+        served = slq_spectrum(matvec, params_like, rng, num_probes=3,
+                              num_steps=8, client=client)
+    assert np.array_equal(direct.nodes, served.nodes)
+    assert np.array_equal(direct.weights, served.weights)
+    assert direct.trace_est == served.trace_est
+
+
+def test_empty_value_window_resolves_at_submit():
+    d, e = _problem(32)
+    lo = float(np.min(np.asarray(d)) - np.sum(np.abs(e)) - 10.0)
+    with EigensolverClient() as client:
+        lam = client.solve_range(d, e, select="v", vl=lo - 5.0, vu=lo)
+    assert lam.shape == (0,)
+
+
+# ------------------------------------------------------------- isolation
+
+
+def test_poisoned_request_fails_alone():
+    good1 = _problem(64, seed=1)
+    good2 = _problem(64, seed=2)
+    with EigensolverClient(max_batch=8, max_wait_us=50_000) as client:
+        f1 = client.solve_async(*good1)
+        bad = client.solve_async(np.zeros(64), np.zeros(10))  # wrong e width
+        f_bad_method = client.submit(SolveRequest(
+            d=good1[0], e=good1[1], method="nope"))
+        f2 = client.solve_async(*good2)
+        with pytest.raises(ValueError, match="batched solve expects"):
+            bad.result(timeout=600)
+        with pytest.raises(ValueError, match="unknown method"):
+            f_bad_method.result(timeout=600)
+        assert jnp.array_equal(f1.result(timeout=600).eigenvalues,
+                               eigvalsh_tridiagonal(*good1))
+        assert jnp.array_equal(f2.result(timeout=600).eigenvalues,
+                               eigvalsh_tridiagonal(*good2))
+
+
+def test_flush_failure_falls_back_to_singles(monkeypatch):
+    """A whole-flush error must demote to per-request solves so only the
+    genuinely poisoned member fails."""
+    real_execute = _plan.SolvePlan.execute
+
+    def explode_on_batches(self, d, e, orig_n=None):
+        if d.shape[0] > 1:
+            raise RuntimeError("injected device fault")
+        return real_execute(self, d, e, orig_n=orig_n)
+
+    monkeypatch.setattr(_plan.SolvePlan, "execute", explode_on_batches)
+    p1, p2 = _problem(64, seed=11), _problem(64, seed=12)
+    with EigensolverClient(max_batch=8, max_wait_us=100_000,
+                           retries=0) as client:
+        f1 = client.solve_async(*p1)
+        f2 = client.solve_async(*p2)
+        r1 = f1.result(timeout=600).eigenvalues
+        r2 = f2.result(timeout=600).eigenvalues
+        snap = client.metrics()
+    monkeypatch.undo()
+    assert jnp.array_equal(r1, eigvalsh_tridiagonal(*p1))
+    assert jnp.array_equal(r2, eigvalsh_tridiagonal(*p2))
+    assert any(b["fallbacks"] >= 1 for b in snap["buckets"].values())
+    assert all(b["errors"] == 0 for b in snap["buckets"].values())
+
+
+# ----------------------------------------------------------- backpressure
+
+
+def test_backpressure_bound_honored(monkeypatch):
+    monkeypatch.setattr(
+        _plan.SolvePlan, "execute",
+        lambda self, d, e, orig_n=None: (time.sleep(0.02), _slow_result(d))[1])
+    depth = 4
+    with EigensolverClient(max_batch=2, max_wait_us=500,
+                           queue_depth=depth) as client:
+        futs = []
+
+        def flood():
+            for s in range(8):
+                futs.append(client.solve_async(*_problem(64, seed=s)))
+
+        threads = [threading.Thread(target=flood) for _ in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for f in futs:
+            f.result(timeout=600)
+        peak = client.scheduler.peak_pending
+    assert peak <= depth, f"peak pending {peak} exceeded depth {depth}"
+
+
+def _slow_result(d):
+    B, n = d.shape
+    return _br.BRBatchResult(jnp.zeros((B, n), d.dtype), None, None, ())
+
+
+def test_queue_full_times_out_without_engine():
+    cfg = ServeConfig(queue_depth=1, submit_timeout_s=0.05)
+    sched = CoalescingScheduler(cfg)
+    d, e = _problem(64)
+    f1 = sched.submit(SolveRequest(d=d, e=e))
+    assert isinstance(f1, Future) and not f1.done()
+    f2 = sched.submit(SolveRequest(d=d, e=e))  # no engine: queue stays full
+    with pytest.raises(QueueFull):
+        f2.result(timeout=1)
+    sched.close()
+
+
+# ------------------------------------------------- cache/stats satellites
+
+
+def test_clear_plan_cache_resets_trace_counters():
+    d, e = _problem(48, seed=21)
+    eigvalsh_tridiagonal(d, e)
+    eigvalsh_tridiagonal_range(d, e, select="i", il=0, iu=3)
+    assert _plan.EXECUTOR_TRACES.count >= 0
+    clear_plan_cache()
+    stats = plan_cache_stats()
+    assert stats["executor_traces"] == 0
+    assert stats["range_executor_traces"] == 0
+    assert stats["size"] == 0 and stats["range_size"] == 0
+    assert stats["hits"] == stats["misses"] == 0
+
+
+def test_state_bytes_reported_for_both_plan_kinds():
+    clear_plan_cache()
+    d, e = _problem(64, seed=22)
+    eigvalsh_tridiagonal(d, e)
+    eigvalsh_tridiagonal_range(d, e, select="i", il=0, iu=7)
+    stats = plan_cache_stats()
+    assert stats["state_bytes"] > 0
+    assert stats["range_state_bytes"] > 0
+    # The models, spelled out: (3 + r) * N * bucket * 8 bytes and
+    # bucket * (2n + 4k) * 8 bytes.
+    assert stats["state_bytes"] == (3 + 2) * 64 * 1 * 8
+    assert stats["range_state_bytes"] == 1 * (2 * 64 + 4 * 8) * 8
+
+
+def test_prewarm_makes_cold_start_free():
+    clear_plan_cache()
+    out = prewarm([{"kind": "solve", "n": 64, "batch": 4},
+                   {"kind": "range", "n": 64, "k": 8, "batch": 1}])
+    assert out["plans"] == 2
+    t0 = plan_cache_stats()
+    d, e = _problem(60, seed=23)   # same buckets: N=64, k->8
+    D = np.stack([np.asarray(d)] * 3)
+    E = np.stack([np.asarray(e)] * 3)
+    eigvalsh_tridiagonal_batch(D, E)
+    eigvalsh_tridiagonal_range(np.pad(d, (0, 4)), np.pad(e, (0, 4)),
+                               select="i", il=10, iu=15)
+    t1 = plan_cache_stats()
+    assert t1["executor_traces"] == t0["executor_traces"]
+    assert t1["range_executor_traces"] == t0["range_executor_traces"]
+
+
+def test_cancelled_future_does_not_kill_engine():
+    """A caller cancelling (or abandoning) its future must not crash the
+    worker thread -- later requests still resolve."""
+    p1, p2 = _problem(64, seed=41), _problem(64, seed=42)
+    with EigensolverClient(max_batch=4, max_wait_us=50_000) as client:
+        f1 = client.solve_async(*p1)
+        f1.cancel()   # queued futures are never marked running: cancellable
+        f2 = client.solve_async(*p2)
+        got = f2.result(timeout=600).eigenvalues
+    assert jnp.array_equal(got, eigvalsh_tridiagonal(*p2))
+
+
+def test_prewarm_slq_matches_service_flush_executable():
+    """prewarm kind="slq" must compile the boundary+track executable the
+    serve flush actually runs, so the first real SLQ request is trace-free."""
+    clear_plan_cache()
+    prewarm([{"kind": "slq", "n": 16, "batch": 4, "leaf": 8}])
+    t0 = plan_cache_stats()["executor_traces"]
+    D = np.random.default_rng(5).normal(size=(3, 16))
+    E = np.random.default_rng(6).normal(size=(3, 15))
+    with EigensolverClient(max_wait_us=1000) as client:
+        res = client.submit(SolveRequest(d=D, e=E, kind="slq",
+                                         knobs={"leaf": 8})).result(
+                                             timeout=600)
+    assert res.blo is not None
+    assert plan_cache_stats()["executor_traces"] == t0
+
+
+def test_engine_survives_heartbeat_write_failure():
+    """An unwritable heartbeat path degrades monitoring, never serving."""
+    p1, p2 = _problem(48, seed=51), _problem(48, seed=52)
+    with EigensolverClient(heartbeat_path="/proc/nope/hb.json",
+                           max_wait_us=1000) as client:
+        r1 = client.solve(*p1)
+        r2 = client.solve(*p2)   # the worker thread must still be alive
+    assert jnp.array_equal(r1, eigvalsh_tridiagonal(*p1))
+    assert jnp.array_equal(r2, eigvalsh_tridiagonal(*p2))
+
+
+def test_prewarm_full_kind_covers_leaf_sized_requests():
+    """kind='full' prewarm entries must ride the same routing rules as
+    real single-problem requests (incl. the L==0 boundary-rows rule)."""
+    clear_plan_cache()
+    prewarm([{"kind": "full", "n": 16, "batch": 1}])
+    t0 = plan_cache_stats()
+    execute_request(SolveRequest(d=np.ones(16), e=np.zeros(15)))
+    t1 = plan_cache_stats()
+    assert t1["executor_traces"] == t0["executor_traces"]
+    assert t1["misses"] == t0["misses"]
+
+
+def test_return_boundary_requires_br():
+    with pytest.raises(TypeError, match="require method='br'"):
+        route_request(SolveRequest(d=np.ones(8), e=np.zeros(7),
+                                   method="bisect", return_boundary=True))
+    with pytest.raises(TypeError, match="require method='br'"):
+        route_request(SolveRequest(d=np.ones((2, 8)), e=np.zeros((2, 7)),
+                                   kind="slq", method="sterf"))
+
+
+def test_mixed_n_flush_via_orig_n_bitwise():
+    """The tracked-row mixed-size hook: host-padded problems inside one
+    launch return the same boundary rows as their sync solves."""
+    p40, p64 = _problem(40, seed=31), _problem(64, seed=32)
+    s40 = _br.eigvalsh_tridiagonal_br(*p40, return_boundary=True)
+    s64 = _br.eigvalsh_tridiagonal_br(*p64, return_boundary=True)
+    d40, e40 = _host_pad(np.asarray(p40[0])[None], np.asarray(p40[1])[None],
+                         64)
+    D = np.concatenate([d40, np.asarray(p64[0])[None]], axis=0)
+    E = np.concatenate([e40, np.asarray(p64[1])[None]], axis=0)
+    plan = _plan.make_plan(64, 2, return_boundary=True)
+    res = plan.execute(D, E, orig_n=np.asarray([40, 64], np.int32))
+    assert jnp.array_equal(res.eigenvalues[0, :40], s40.eigenvalues)
+    assert jnp.array_equal(res.blo[0, :40], s40.blo)
+    assert jnp.array_equal(res.bhi[0, :40], s40.bhi)
+    assert jnp.array_equal(res.eigenvalues[1], s64.eigenvalues)
+    assert jnp.array_equal(res.blo[1], s64.blo)
+    assert jnp.array_equal(res.bhi[1], s64.bhi)
