@@ -1,0 +1,66 @@
+"""Strong-scaling benchmark for the distributed-conquer sharded solve.
+
+One huge problem per row, solved end-to-end at mesh widths P in
+{1, 2, 4} (capped by the visible device count), so the derived column
+is the strong-scaling ratio wall(P) / wall(1) -- the number the
+distributed-conquer acceptance gate reads from BENCH_dist.json:
+
+    PYTHONPATH=src python -m benchmarks.run --only dist --json BENCH_dist.json
+
+The driver forces >= 4 host devices for ``--only dist`` runs (or
+exactly ``--mesh P``); on a box whose *physical* core count is below the
+mesh width the forced devices time-slice one core and the ratio
+degrades toward >= 1.0 -- the JSON meta block records cpu_count so a
+reader can tell real scaling from oversubscription.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _time_solve(d, e, P):
+    import jax
+
+    from repro.core.br_dc import eigvalsh_tridiagonal_batch
+
+    # Warmup carries the trace + compile for this (n, P) bucket.
+    jax.block_until_ready(
+        eigvalsh_tridiagonal_batch(d, e, mesh=P).eigenvalues)
+    t0 = time.perf_counter()
+    jax.block_until_ready(
+        eigvalsh_tridiagonal_batch(d, e, mesh=P).eigenvalues)
+    return time.perf_counter() - t0
+
+
+def run(report, quick: bool = False, max_shards: int | None = None,
+        sizes=None):
+    import jax
+
+    devs = jax.device_count()
+    if devs < 2:
+        report("dist_SKIP", 0.0,
+               f"needs >= 2 devices, have {devs}; run via "
+               f"`benchmarks.run --only dist` (forces host devices)")
+        return
+    if sizes is None:
+        sizes = (2048, 4096) if quick else (16384, 65536)
+    widths = [P for P in (1, 2, 4) if P <= devs]
+    if max_shards is not None:
+        widths = [P for P in widths if P <= max_shards] or [1]
+
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        d = rng.standard_normal((1, n))
+        e = rng.standard_normal((1, n - 1))
+        base = None
+        for P in widths:
+            dt = _time_solve(d, e, P)
+            if P == 1:
+                base = dt
+                derived = "P1 baseline"
+            else:
+                derived = f"vs_P1={dt / base:.3f}" if base else ""
+            report(f"dist_n{n}_P{P}", dt, derived)

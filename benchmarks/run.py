@@ -13,6 +13,7 @@ import argparse
 import json
 import os
 import platform
+import sys
 import time
 
 
@@ -33,7 +34,26 @@ def main(argv=None) -> None:
                     help="force this many XLA host CPU devices (default: "
                          "cpu count) so batched solves shard across cores; "
                          "0 leaves XLA_FLAGS untouched")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="solver mesh width for the dist suite: force at "
+                         "least this many host devices (power of two) and "
+                         "shard huge solves over them; errors out if jax "
+                         "was initialized first instead of silently "
+                         "falling back to one device")
     args = ap.parse_args(argv)
+
+    if args.mesh is not None:
+        if args.mesh < 1 or (args.mesh & (args.mesh - 1)):
+            ap.error(f"--mesh must be a positive power of two, "
+                     f"got {args.mesh}")
+        if args.host_devices is not None and args.host_devices < args.mesh:
+            ap.error(f"--host-devices {args.host_devices} is smaller than "
+                     f"--mesh {args.mesh}")
+        if "jax" in sys.modules:
+            raise RuntimeError(
+                "--mesh must take effect before first jax init, but jax "
+                "is already imported in this process; run the benchmark "
+                "driver as the entry point (python -m benchmarks.run)")
 
     # Must happen before the first jax import: forced host devices let the
     # batched plan executor shard problem batches across CPU cores (the
@@ -46,19 +66,32 @@ def main(argv=None) -> None:
     from repro.hostdev import force_host_devices  # jax-free
     if args.host_devices is not None:
         force_host_devices(args.host_devices)
+    elif args.mesh is not None:
+        force_host_devices(args.mesh)
     elif args.only in ("batched", "serve"):
         # serve: coalesced flushes shard across host devices exactly like
         # the batched suite; the one-by-one baseline is one problem wide
         # and cannot, which is the point of the comparison.
         force_host_devices()
+    elif args.only == "dist":
+        # Strong scaling needs >= 4 shards even on small hosts.
+        force_host_devices(max(4, os.cpu_count() or 1))
 
     import jax
     jax.config.update("jax_enable_x64", True)
 
-    from benchmarks import (bench_accuracy, bench_batched, bench_fused,
-                            bench_kernels, bench_merge, bench_partial,
-                            bench_scaling, bench_serve, bench_vs_lazy,
-                            bench_vs_sterf, bench_workspace, roofline)
+    if args.mesh is not None and jax.device_count() < args.mesh:
+        raise RuntimeError(
+            f"--mesh {args.mesh} requested but only {jax.device_count()} "
+            f"devices came up; XLA_FLAGS already configured "
+            f"a smaller host-device count before this run "
+            f"(XLA_FLAGS={os.environ.get('XLA_FLAGS', '')!r})")
+
+    from benchmarks import (bench_accuracy, bench_batched, bench_dist,
+                            bench_fused, bench_kernels, bench_merge,
+                            bench_partial, bench_scaling, bench_serve,
+                            bench_vs_lazy, bench_vs_sterf, bench_workspace,
+                            roofline)
 
     if args.prewarm:
         from repro.core.plan import prewarm
@@ -102,6 +135,8 @@ def main(argv=None) -> None:
         "merge": lambda: bench_merge.run(report, quick=args.quick),
         "partial": lambda: bench_partial.run(report, quick=args.quick),
         "serve": lambda: bench_serve.run(report, quick=args.quick),
+        "dist": lambda: bench_dist.run(report, quick=args.quick,
+                                       max_shards=args.mesh),
         "roofline": lambda: roofline.run(report),
     }
 

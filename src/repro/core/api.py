@@ -56,6 +56,14 @@ def eigvalsh_tridiagonal(d, e, method: str = "br", **kw):
     "br" (one device solve via the plan/executor core) and "bisect"
     (one sliced solve over all indices), looped for the baseline
     methods.
+
+    "br" additionally accepts ``mesh=`` for distributed conquer: pass a
+    power-of-two shard count (or a Mesh) to split the problem into
+    contiguous shards over a 1-D device mesh; the default "auto" shards
+    huge problems whenever several devices are visible and is a no-op
+    otherwise.  ``compress_halo=True`` opts the sharded all-gather into
+    int8 boundary-row compression.  See
+    :func:`repro.core.br_dc.eigvalsh_tridiagonal_br` for details.
     """
     d = jnp.asarray(d)
     kind = "batch" if d.ndim == 2 else "full"

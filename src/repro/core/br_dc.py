@@ -142,6 +142,45 @@ def _level_coupling(e_pad, level: int, leaf: int, num_merges: int):
     return jnp.abs(beta), jnp.where(beta >= 0.0, 1.0, -1.0).astype(e_pad.dtype)
 
 
+def _level_pairs(lam, rows, track, M):
+    """Pair adjacent nodes for one level of merges.
+
+    lam: (B, 2*nm, M); rows: (B, 2*nm, r, M); track: (B,) int32 *global*
+    tracked row index or None; M the child node size.  Returns
+    (lam_pairs (B, nm, 2, M), z_inner (B, nm, 2, M), R (B, nm, r, 2M)).
+
+    Parent slot sources: blo <- [blo_L, 0]; bhi <- [0, bhi_R]; the
+    tracked row lives in whichever child spans index track[b] at this
+    level -- a traced per-problem side, identical for every node of that
+    problem (only the one node on the tracked row's spine carries a
+    meaningful value).  ``(track // M) % 2`` uses the *global* index even
+    for shard-local subtrees: a shard's origin is a multiple of 2M at
+    every subtree level, so the parity is the same in local and global
+    coordinates.
+    """
+    B = lam.shape[0]
+    nm = lam.shape[1] // 2
+    r = rows.shape[2]
+    lam_pairs = lam.reshape(B, nm, 2, M)
+    rows_pairs = rows.reshape(B, nm, 2, r, M)  # (B, merge, child, slot, M)
+    z_inner = jnp.stack(
+        [rows_pairs[:, :, 0, 1, :], rows_pairs[:, :, 1, 0, :]], axis=2)
+    zeros = jnp.zeros((B, nm, M), lam.dtype)
+    selected = [
+        jnp.concatenate([rows_pairs[:, :, 0, 0, :], zeros], axis=-1),
+        jnp.concatenate([zeros, rows_pairs[:, :, 1, 1, :]], axis=-1),
+    ]
+    if track is not None:
+        side = (track // M) % 2                            # (B,)
+        left = jnp.concatenate([rows_pairs[:, :, 0, 2, :], zeros],
+                               axis=-1)
+        right = jnp.concatenate([zeros, rows_pairs[:, :, 1, 2, :]],
+                                axis=-1)
+        selected.append(
+            jnp.where((side == 0)[:, None, None], left, right))
+    return lam_pairs, z_inner, jnp.stack(selected, axis=2)  # R (B,nm,r,2M)
+
+
 def _br_dc_padded_batch(d_pad, e_pad, track, *, leaf, chunk, niter, use_zhat,
                         return_boundary, tol_factor, stream_threshold,
                         deflate_budget, resident_threshold, fused):
@@ -168,7 +207,6 @@ def _br_dc_padded_batch(d_pad, e_pad, track, *, leaf, chunk, niter, use_zhat,
 
     track_local = None if track is None else track % leaf
     lam, rows = _leaf_solve(d_adj, e_pad, leaf, track_local=track_local)
-    r = rows.shape[2]
 
     kprimes = []
     for level in range(L):
@@ -176,30 +214,7 @@ def _br_dc_padded_batch(d_pad, e_pad, track, *, leaf, chunk, niter, use_zhat,
         M = lam.shape[2]
         root = (nm == 1) and not return_boundary
         rho, sgn = _level_coupling(e_pad, level, leaf, nm)   # (B, nm)
-
-        lam_pairs = lam.reshape(B, nm, 2, M)
-        rows_pairs = rows.reshape(B, nm, 2, r, M)  # (B, merge, child, slot, M)
-        z_inner = jnp.stack(
-            [rows_pairs[:, :, 0, 1, :], rows_pairs[:, :, 1, 0, :]], axis=2)
-        zeros = jnp.zeros((B, nm, M), lam.dtype)
-        # Parent slot sources: blo <- [blo_L, 0]; bhi <- [0, bhi_R]; the
-        # tracked row lives in whichever child spans index track[b] at
-        # this level -- a traced per-problem side, identical for every
-        # node of that problem (only the one node on the tracked row's
-        # spine carries a meaningful value).
-        selected = [
-            jnp.concatenate([rows_pairs[:, :, 0, 0, :], zeros], axis=-1),
-            jnp.concatenate([zeros, rows_pairs[:, :, 1, 1, :]], axis=-1),
-        ]
-        if track is not None:
-            side = (track // M) % 2                            # (B,)
-            left = jnp.concatenate([rows_pairs[:, :, 0, 2, :], zeros],
-                                   axis=-1)
-            right = jnp.concatenate([zeros, rows_pairs[:, :, 1, 2, :]],
-                                    axis=-1)
-            selected.append(
-                jnp.where((side == 0)[:, None, None], left, right))
-        R = jnp.stack(selected, axis=2)           # (B, nm, r, 2M)
+        lam_pairs, z_inner, R = _level_pairs(lam, rows, track, M)
 
         res = _merge.merge_level_batched(
             lam_pairs, z_inner, R, rho, sgn,
@@ -210,6 +225,126 @@ def _br_dc_padded_batch(d_pad, e_pad, track, *, leaf, chunk, niter, use_zhat,
             resident_threshold=resident_threshold, fused=fused)
         lam, rows = res.lam, res.rows             # (B, nm, 2M) / (B, nm, r, 2M)
         kprimes.append(res.kprime)                # (B, nm)
+
+    return lam[:, 0], rows[:, 0], kprimes
+
+
+def _br_dc_sharded_batch(d_loc, e_loc, track, *, shards, axis_name, leaf,
+                         chunk, niter, use_zhat, return_boundary, tol_factor,
+                         stream_threshold, deflate_budget,
+                         resident_threshold, fused, compress_halo=False):
+    """Distributed-conquer D&C body: runs inside a 1-D shard_map mesh.
+
+    d_loc, e_loc: (B, Np) -- this device's contiguous slice of the padded
+    (B, N = shards * Np) problem; track: (B,) int32 *global* tracked row
+    index or None (replicated).  Returns the same (lam (B, N), rows
+    (B, r, N), kprimes) as :func:`_br_dc_padded_batch`, replicated on
+    every device.
+
+    Phase structure (the paper's O(n) conquer state is what makes every
+    cross-device transfer linear):
+
+      1. *Divide*: rank-one coupling pre-subtraction.  Couplings interior
+         to the shard are local; each shard-edge coupling lives in the
+         left neighbour's last ``e`` slot, fetched with a one-element
+         ppermute halo (`dist.sharding.halo_from_left`).  Scatter-add
+         grouping mirrors the single-device path (all ``k-1`` slots, then
+         all ``k`` slots) so ``d_adj`` is bit-identical to its slice of
+         the unsharded computation.
+      2. *Independent subtrees*: leaves and the ``log2(Np/leaf)`` low
+         merge levels run embarrassingly parallel per device -- the same
+         level loop as the single-device path on the local slice, never
+         in root mode.
+      3. *Transition*: one all-gather of the O(n) state -- each shard's
+         eigenvalues (Np) and r selected rows (r * Np); optionally int8
+         error-feedback compressed rows (``compress_halo``).
+      4. *Cooperative levels*: state is replicated; each level's merge
+         head and post-pass run replicated while the O(K^2) secular root
+         solve is sharded into N/shards-root windows per device and the
+         (origin, tau) windows all-gathered (see
+         :func:`repro.core.merge.merge_level_coop`).
+    """
+    from repro.dist import sharding as _dist
+    B, Np = d_loc.shape
+    if Np % leaf:
+        raise ValueError(
+            f"shard width {Np} must be a multiple of leaf={leaf} "
+            f"(route resolution guarantees 2^L >= shards)")
+    L_loc = int(math.log2(Np // leaf))
+    L_coop = int(math.log2(shards))
+    nb_loc = Np // leaf
+    p = jax.lax.axis_index(axis_name)
+
+    # ---- divide: coupling pre-subtraction with shard-edge halo ----------
+    edge = jnp.abs(e_loc[:, -1])                       # right-edge coupling
+    from_left = _dist.halo_from_left(edge, shards, axis_name)  # 0 on shard 0
+    sub = jnp.zeros_like(d_loc)
+    # Group scatter-adds exactly like the single-device path: first every
+    # boundary's k-1 slot, then every k slot (a position can receive one
+    # of each; FP addition order must match for bit-identity).
+    if nb_loc > 1:
+        k = leaf * jnp.arange(1, nb_loc)
+        rho_int = jnp.abs(e_loc[:, k - 1])
+        sub = sub.at[:, k - 1].add(rho_int)
+    # e_loc[:, -1] is zero-padded on the last shard, so its edge term
+    # vanishes there exactly as the global boundary list ends at N - leaf.
+    sub = sub.at[:, Np - 1].add(edge)
+    if nb_loc > 1:
+        sub = sub.at[:, k].add(rho_int)
+    sub = sub.at[:, 0].add(from_left)
+    d_adj = d_loc - sub
+
+    # ---- phase 2: leaves + independent local subtree --------------------
+    # Shard origins are multiples of leaf, so leaf-local positions (and
+    # the level-side parities in _level_pairs) match global coordinates.
+    track_local = None if track is None else track % leaf
+    lam, rows = _leaf_solve(d_adj, e_loc, leaf, track_local=track_local)
+
+    kprimes = []
+    for level in range(L_loc):
+        nm_loc = lam.shape[1] // 2
+        M = lam.shape[2]
+        rho, sgn = _level_coupling(e_loc, level, leaf, nm_loc)
+        lam_pairs, z_inner, R = _level_pairs(lam, rows, track, M)
+        res = _merge.merge_level_batched(
+            lam_pairs, z_inner, R, rho, sgn,
+            niter=niter, chunk=chunk, use_zhat=use_zhat,
+            root_mode=False,  # the local root is never the global root
+            tol_factor=tol_factor, stream_threshold=stream_threshold,
+            deflate_budget=deflate_budget,
+            resident_threshold=resident_threshold, fused=fused)
+        lam, rows = res.lam, res.rows
+        # Diagnostics keep the global (B, num_merges) layout: shard-local
+        # nodes are contiguous in the global node order.
+        kprimes.append(_dist.gather_lanes(res.kprime, axis_name))
+
+    # ---- phase 3: the O(n) state all-gather -----------------------------
+    lam, rows = _dist.gather_tree_state(lam[:, 0], rows[:, 0], axis_name,
+                                        compress=compress_halo)
+    # Shard-edge couplings for the cooperative levels (one (B,) value per
+    # shard; sgn needs the raw signed e, so gather before the abs).
+    e_edges = _dist.gather_lanes(e_loc[:, -1:], axis_name)   # (B, shards)
+
+    # ---- phase 4: cooperative levels ------------------------------------
+    for _ in range(L_coop):
+        nm = lam.shape[1] // 2
+        M = lam.shape[2]
+        root = (nm == 1) and not return_boundary
+        q = (2 * jnp.arange(nm) + 1) * (M // Np) - 1
+        beta = e_edges[:, q]                               # (B, nm)
+        rho = jnp.abs(beta)
+        sgn = jnp.where(beta >= 0.0, 1.0, -1.0).astype(e_loc.dtype)
+        lam_pairs, z_inner, R = _level_pairs(lam, rows, track, M)
+        res = _merge.merge_level_coop(
+            lam_pairs, z_inner, R, rho, sgn,
+            axis_name=axis_name, shards=shards,
+            niter=niter, chunk=chunk, use_zhat=use_zhat,
+            root_mode=root, tol_factor=tol_factor,
+            stream_threshold=stream_threshold,
+            deflate_budget=deflate_budget,
+            resident_threshold=resident_threshold, fused=fused)
+        lam, rows = res.lam, res.rows
+        kprimes.append(res.kprime)
 
     return lam[:, 0], rows[:, 0], kprimes
 
@@ -237,7 +372,8 @@ def eigvalsh_tridiagonal_batch(d, e, *, leaf: int = 32, chunk: int = 256,
                                deflate_budget: int | None = None,
                                resident_threshold: int | None = None,
                                fused: bool = True,
-                               dtype=None) -> BRBatchResult:
+                               dtype=None, mesh="auto",
+                               compress_halo: bool = False) -> BRBatchResult:
     """All eigenvalues of B independent symmetric tridiagonals at once.
 
     One executor launch, one XLA program, B * O(n) persistent state: the
@@ -273,7 +409,7 @@ def eigvalsh_tridiagonal_batch(d, e, *, leaf: int = 32, chunk: int = 256,
                         stream_threshold=stream_threshold,
                         deflate_budget=deflate_budget,
                         resident_threshold=resident_threshold, fused=fused,
-                        dtype=d.dtype)
+                        dtype=d.dtype, mesh=mesh, compress_halo=compress_halo)
     return p.execute(d, e)
 
 
@@ -286,7 +422,8 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
                             deflate_budget: int | None = None,
                             resident_threshold: int | None = None,
                             fused: bool = True,
-                            dtype=None) -> BRResult:
+                            dtype=None, mesh="auto",
+                            compress_halo: bool = False) -> BRResult:
     """All eigenvalues of the symmetric tridiagonal (d, e) via boundary-row D&C.
 
     O(n) auxiliary memory; same secular merges as conventional D&C
@@ -321,6 +458,15 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
         0 on CPU, 512 on accelerators (merge.default_resident_threshold).
       fused: use the single-pass fused conquer post-phase (False: legacy
         two-pass, kept as benchmark baseline).
+      mesh: distributed-conquer routing.  "auto" (default) shards huge
+        problems (padded N >= plan.DIST_AUTO_MIN_N) over the largest
+        power-of-two device count available -- a no-op on one device; an
+        int or a Mesh demands exactly that many contiguous problem
+        shards and raises when devices or tree leaves are short; 1/None
+        forces the single-device path.
+      compress_halo: int8-compress the boundary rows in the sharded
+        path's subtree->cooperative all-gather (off by default; the
+        uncompressed sharded path is bit-identical to single-device).
     """
     d = jnp.asarray(d)
     e = jnp.asarray(e)
@@ -345,7 +491,7 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
                         stream_threshold=stream_threshold,
                         deflate_budget=deflate_budget,
                         resident_threshold=resident_threshold, fused=fused,
-                        dtype=d.dtype)
+                        dtype=d.dtype, mesh=mesh, compress_halo=compress_halo)
     res = p.execute(d[None, :], e[None, :])
     blo = None if res.blo is None else res.blo[0]
     bhi = None if res.bhi is None else res.bhi[0]

@@ -398,6 +398,31 @@ def _merge_compact(d, z, R, deflated):
     return d, z, R, kprime
 
 
+def _merge_head(lam_pairs, z_inner, R, rho, sgn, *, tol_factor,
+                deflate_budget):
+    """Everything before the secular solve, for one level of merges.
+
+    Per-node prelude (z assembly, pole sort, z-small test) vmapped over
+    the (W,) lane axis, then the parallel deflation head and the
+    compaction permutation.  Returns (d, z, Rp, kprime, rho_eff) with
+    shapes ((W, K), (W, K), (W, r, K), (W,), (W,)).  Shared by
+    :func:`merge_level` and the cooperative distributed level
+    (:func:`merge_level_coop`), which replicates the head on every
+    device of the solver mesh -- it is O(K log K) per lane against the
+    solve's O(K^2), and replicating it keeps the sharded solve's inputs
+    bit-identical to the single-device path's.
+    """
+    d, z, Rp, small, tol, rho_eff = jax.vmap(
+        lambda lp, zi, r_, rh, sg: _merge_assemble(
+            lp[0], lp[1], zi[0], zi[1], r_, rh, sg, tol_factor)
+    )(lam_pairs, z_inner, R, rho, sgn)
+    d, z, Rp, deflated = _deflate_level(d, z, Rp, small, tol,
+                                        budget=deflate_budget)
+    z = jnp.where(deflated, 0.0, z)
+    d, z, Rp, kprime = jax.vmap(_merge_compact)(d, z, Rp, deflated)
+    return d, z, Rp, kprime, rho_eff
+
+
 def merge_level(lam_pairs, z_inner, R, rho, sgn, *,
                 niter: int = _sec.DEFAULT_NITER, chunk: int = 256,
                 use_zhat: bool = True,
@@ -452,14 +477,9 @@ def merge_level(lam_pairs, z_inner, R, rho, sgn, *,
     dtype = lam_pairs.dtype
 
     # ---- merge head: prelude (vmapped) + parallel deflation + compaction
-    d, z, Rp, small, tol, rho_eff = jax.vmap(
-        lambda lp, zi, r_, rh, sg: _merge_assemble(
-            lp[0], lp[1], zi[0], zi[1], r_, rh, sg, tol_factor)
-    )(lam_pairs, z_inner, R, rho, sgn)
-    d, z, Rp, deflated = _deflate_level(d, z, Rp, small, tol,
-                                        budget=deflate_budget)
-    z = jnp.where(deflated, 0.0, z)
-    d, z, Rp, kprime = jax.vmap(_merge_compact)(d, z, Rp, deflated)
+    d, z, Rp, kprime, rho_eff = _merge_head(lam_pairs, z_inner, R, rho, sgn,
+                                            tol_factor=tol_factor,
+                                            deflate_budget=deflate_budget)
 
     # ---- single-launch resident merge (small K, solve + post-pass) ------
     if fused and not root_mode and K <= resident_threshold:
@@ -517,6 +537,126 @@ def merge_node(dL, dR, zL, zR, R, rho, sgn, **kw) -> MergeResult:
         jnp.asarray(rho)[None], jnp.asarray(sgn)[None], **kw)
     return MergeResult(res.lam[0], res.rows[0], res.kprime[0],
                        res.rho_eff[0])
+
+
+def merge_level_coop(lam_pairs, z_inner, R, rho, sgn, *, axis_name: str,
+                     shards: int,
+                     niter: int = _sec.DEFAULT_NITER, chunk: int = 256,
+                     use_zhat: bool = True, root_mode: bool = False,
+                     tol_factor: float = 8.0,
+                     stream_threshold: int | None = None,
+                     deflate_budget: int = DEFAULT_DEFLATE_BUDGET,
+                     resident_threshold: int | None = None,
+                     fused: bool = True) -> MergeResult:
+    """One *cooperative* tree level inside a shard_map body.
+
+    Called with fully replicated level state (every device of the 1-D
+    solver mesh holds all ``nm`` merges after the subtree->cooperative
+    all-gather).  Work splits three ways:
+
+      * merge head (assemble, deflation, compaction): replicated -- it is
+        O(K log K) per lane and replicating it keeps every device's pole
+        state bit-identical to the single-device path's;
+      * secular root solve -- the level's O(K^2) dominant cost -- sharded:
+        device p solves the root window ``[w * Kw, (w+1) * Kw)`` of merge
+        ``m`` where ``m = p // G``, ``w = p % G``, ``G = shards / nm``
+        windows per merge and ``Kw = K / G`` (== N / shards roots per
+        device at every cooperative level), then the (origin, tau)
+        windows are all-gathered -- the O(n) halo the paper's linear
+        state makes cheap.  Per-root arithmetic depends only on the root
+        index and the replicated pole state, so the gathered roots are
+        bit-identical to a single-device solve;
+      * fused post-pass + final sort: replicated.  The post-pass is the
+        level's second-order cost (~K per root vs the solve's
+        niter * K); replicating it avoids re-associating its streamed
+        accumulation, which keeps the whole cooperative level
+        bit-identical to the single-device path whenever the lane math
+        itself is (see merge-head contract).
+
+    ``lam_pairs`` (B, nm, 2, M) etc. as in :func:`merge_level_batched`;
+    ``nm`` must divide ``shards``.  Merges small enough for the resident
+    single-launch path run fully replicated through
+    :func:`merge_level_batched` instead -- window sharding buys nothing
+    at resident sizes and the branch structure must mirror
+    :func:`merge_level`'s for bit-identity.
+    """
+    B, nm, _, M = lam_pairs.shape
+    K = 2 * M
+    if stream_threshold is None:
+        stream_threshold = default_stream_threshold()
+    if resident_threshold is None:
+        resident_threshold = default_resident_threshold()
+    if shards % nm:
+        raise ValueError(
+            f"cooperative level expects nm | shards; got nm={nm}, "
+            f"shards={shards}")
+    G = shards // nm                     # root windows per merge
+    if (fused and not root_mode and K <= resident_threshold) or G <= 1 \
+            or K % G:
+        return merge_level_batched(
+            lam_pairs, z_inner, R, rho, sgn, niter=niter, chunk=chunk,
+            use_zhat=use_zhat, root_mode=root_mode, tol_factor=tol_factor,
+            stream_threshold=stream_threshold,
+            deflate_budget=deflate_budget,
+            resident_threshold=resident_threshold, fused=fused)
+    Kw = K // G
+    dense = fused and K <= stream_threshold
+    dtype = lam_pairs.dtype
+    r = R.shape[2]
+
+    # ---- merge head, replicated over the flattened (B * nm) lanes -------
+    d, z, Rp, kprime, rho_eff = _merge_head(
+        lam_pairs.reshape(B * nm, 2, M), z_inner.reshape(B * nm, 2, M),
+        R.reshape(B * nm, r, K), rho.reshape(B * nm), sgn.reshape(B * nm),
+        tol_factor=tol_factor, deflate_budget=deflate_budget)
+    d_n = d.reshape(B, nm, K)
+    z_n = z.reshape(B, nm, K)
+    kprime_n = kprime.reshape(B, nm)
+    rho_n = rho_eff.reshape(B, nm)
+
+    # ---- sharded secular solve: this device's (merge, window) pair ------
+    p = jax.lax.axis_index(axis_name)
+    m = p // G
+    w = p % G
+    d_m = jnp.take(d_n, m, axis=1)           # (B, K)
+    z2_m = jnp.take(z_n, m, axis=1) ** 2
+    origin_w, tau_w = _sec.secular_solve_window_batched(
+        d_m, z2_m, jnp.take(rho_n, m, axis=1), jnp.take(kprime_n, m, axis=1),
+        w * Kw, Kw, niter=niter, chunk=chunk, dense=dense)
+
+    # ---- window all-gather: device order IS global root order -----------
+    gathered = jax.lax.all_gather((origin_w, tau_w), axis_name)
+    origin, tau = jax.tree.map(
+        lambda x: x.reshape(nm, G, B, Kw).transpose(2, 0, 1, 3)
+                   .reshape(B * nm, K),
+        gathered)
+    lam = jnp.take_along_axis(d, origin, axis=1) + tau
+
+    # ---- replicated post-pass + sort (same code path as merge_level) ----
+    if root_mode:
+        rows = jnp.zeros_like(Rp)
+    elif fused:
+        _, rows = _ops.secular_postpass_batched(
+            Rp, d, z, origin, tau, kprime, rho_eff,
+            use_zhat=use_zhat, chunk=chunk, dense=dense)
+    else:
+        def two_pass(R_, d_, z_, origin_, tau_, kprime_, rho_):
+            zr = z_
+            if use_zhat:
+                zr = _sec.zhat_reconstruct(d_, z_, origin_, tau_, kprime_,
+                                           rho_, chunk=chunk)
+            return _sec.boundary_rows_update(R_, d_, zr, origin_, tau_,
+                                             kprime_, chunk=chunk)
+        rows = jax.vmap(two_pass)(Rp, d, z, origin, tau, kprime, rho_eff)
+
+    p3 = jnp.argsort(lam, axis=1)
+    lam = jnp.take_along_axis(lam, p3, axis=1)
+    if not root_mode:
+        rows = jnp.take_along_axis(rows, p3[:, None, :], axis=2)
+
+    return MergeResult(lam.astype(dtype).reshape(B, nm, K),
+                       rows.reshape(B, nm, r, K),
+                       kprime.reshape(B, nm), rho_eff.reshape(B, nm))
 
 
 def merge_level_batched(lam_pairs, z_inner, R, rho, sgn, **kw):

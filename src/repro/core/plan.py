@@ -16,7 +16,7 @@ and owns the process-wide cache of compiled executables, keyed on
 
     (padded N, leaf, batch bucket, dtype, chunk, niter, use_zhat,
      return_boundary, tol_factor, stream_threshold, deflate_budget,
-     resident_threshold, fused)
+     resident_threshold, fused, shards, compress_halo)
 
 Two requests that differ only in original size n (same padded bucket) or
 only in batch size (same power-of-two bucket) share one executable: the
@@ -76,6 +76,13 @@ class PlanKey(NamedTuple):
     deflate_budget: int
     resident_threshold: int
     fused: bool
+    # Distributed conquer: number of contiguous problem shards on the 1-D
+    # solver mesh (1 == classic single-device path) and whether the
+    # subtree->cooperative all-gather int8-compresses the boundary rows.
+    # Mesh shape is executable identity: same N on a different shard
+    # count is a different XLA program, so it must split the cache.
+    shards: int = 1
+    compress_halo: bool = False
 
 
 def batch_bucket(batch: int) -> int:
@@ -83,6 +90,59 @@ def batch_bucket(batch: int) -> int:
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
     return 1 << (batch - 1).bit_length()
+
+
+# Auto-routing floor: padded problems at least this large pick the
+# sharded path when several devices are visible.  Below it the all-gather
+# plus replicated merge-head overhead outweighs the sharded subtree/
+# secular work (the distributed crossover heuristic in the README).
+DIST_AUTO_MIN_N = 16384
+
+
+def _resolve_shards(mesh, padded_n: int, leaf: int) -> int:
+    """Resolve the ``mesh`` routing knob to a concrete shard count.
+
+    ``mesh`` may be None / 1 (single device), "auto" (shard huge
+    problems over the largest usable power-of-two device count), an int
+    shard count, or a Mesh object (its total size is used).  Explicit
+    requests validate hard -- a clear error beats a silent single-device
+    fallback; "auto" degrades to 1 instead.
+    """
+    max_shards = padded_n // leaf        # one leaf per shard at minimum
+    if mesh is None or mesh == 1:
+        return 1
+    if isinstance(mesh, str):
+        if mesh != "auto":
+            raise ValueError(f"mesh must be 'auto', an int shard count, "
+                             f"or a Mesh; got {mesh!r}")
+        if padded_n < DIST_AUTO_MIN_N:
+            return 1
+        shards = jax.device_count()
+        shards = 1 << (shards.bit_length() - 1)   # largest pow2 <= devices
+        while shards > max_shards:
+            shards //= 2
+        return max(1, shards)
+    shards = int(mesh.size) if hasattr(mesh, "size") else int(mesh)
+    if shards < 1:
+        raise ValueError(f"mesh shard count must be >= 1, got {shards}")
+    if shards == 1:
+        return 1
+    if shards & (shards - 1):
+        raise ValueError(
+            f"mesh shard count must be a power of two (the D&C tree "
+            f"pairs nodes), got {shards}")
+    if shards > jax.device_count():
+        raise ValueError(
+            f"mesh={shards} but only {jax.device_count()} devices are "
+            f"visible; force host devices before first jax init "
+            f"(XLA_FLAGS=--xla_force_host_platform_device_count={shards}, "
+            f"or run.py --mesh {shards})")
+    if shards > max_shards:
+        raise ValueError(
+            f"mesh={shards} needs at least {shards} leaves but "
+            f"padded n={padded_n} with leaf={leaf} has {max_shards}; "
+            f"use fewer shards or a smaller leaf")
+    return shards
 
 
 def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
@@ -93,7 +153,9 @@ def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
                         stream_threshold: int | None = None,
                         deflate_budget: int | None = None,
                         resident_threshold: int | None = None,
-                        fused: bool = True, dtype=None) -> PlanKey:
+                        fused: bool = True, dtype=None,
+                        mesh="auto",
+                        compress_halo: bool = False) -> PlanKey:
     """Resolve a full-spectrum request to its bucketed route key -- pure.
 
     The returned :class:`PlanKey` has every request-determined field
@@ -105,6 +167,15 @@ def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
     when coalesced into the same flush -- the grouping invariant the
     serving scheduler (``repro.serve``) is built on.  Never touches the
     plan cache.
+
+    ``mesh`` routes distributed conquer: the default "auto" shards
+    problems with padded N >= ``DIST_AUTO_MIN_N`` over the largest
+    power-of-two device count available (a no-op on one device); an int /
+    Mesh demands exactly that shard count and raises when the devices or
+    tree leaves are not there.  ``compress_halo`` opts the sharded
+    path's boundary-row all-gather into int8 compression; it is
+    normalized to False on the single-device route so it never splits
+    that cache.
     """
     if n < 1:
         raise ValueError(f"n must be >= 1, got {n}")
@@ -117,6 +188,7 @@ def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
     if resident_threshold is None:
         resident_threshold = _merge.default_resident_threshold()
     N, _ = _br._tree_shape(n, leaf)
+    shards = _resolve_shards(mesh, N, leaf)
     return PlanKey(padded_n=N, leaf=leaf, batch_bucket=0,
                    dtype=jnp.dtype(dtype).name, chunk=int(chunk),
                    niter=int(niter), use_zhat=use_zhat,
@@ -124,7 +196,9 @@ def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
                    tol_factor=float(tol_factor),
                    stream_threshold=int(stream_threshold),
                    deflate_budget=int(deflate_budget),
-                   resident_threshold=int(resident_threshold), fused=fused)
+                   resident_threshold=int(resident_threshold), fused=fused,
+                   shards=shards,
+                   compress_halo=bool(compress_halo) and shards > 1)
 
 
 # Elements per streamed secular tile the CPU path aims for (~2 MiB f64):
@@ -184,6 +258,26 @@ def _batch_sharding(bucket: int):
     return NamedSharding(mesh, PartitionSpec("batch"))
 
 
+_SOLVER_MESH_CACHE: dict[int, Mesh] = {}
+
+
+def _dist_axis() -> str:
+    from repro.dist.sharding import SOLVER_AXIS
+    return SOLVER_AXIS
+
+
+def _solver_mesh(shards: int) -> Mesh:
+    """Cached 1-D solver mesh (one Mesh object per shard count, so the
+    mesh is a stable static jit argument and never causes a retrace)."""
+    with _MESH_LOCK:
+        mesh = _SOLVER_MESH_CACHE.get(shards)
+        if mesh is None:
+            from repro.launch.mesh import make_solver_mesh
+            mesh = make_solver_mesh(shards)
+            _SOLVER_MESH_CACHE[shards] = mesh
+    return mesh
+
+
 @functools.partial(jax.jit, static_argnames=(
     "leaf", "chunk", "niter", "use_zhat", "return_boundary", "tol_factor",
     "stream_threshold", "deflate_budget", "resident_threshold", "fused"))
@@ -205,6 +299,39 @@ def _executor(d_pad, e_pad, track, *, leaf, chunk, niter, use_zhat,
         resident_threshold=resident_threshold, fused=fused)
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "mesh", "shards", "compress_halo", "leaf", "chunk", "niter", "use_zhat",
+    "return_boundary", "tol_factor", "stream_threshold", "deflate_budget",
+    "resident_threshold", "fused"))
+def _executor_sharded(d_pad, e_pad, track, *, mesh, shards, compress_halo,
+                      leaf, chunk, niter, use_zhat, return_boundary,
+                      tol_factor, stream_threshold, deflate_budget,
+                      resident_threshold, fused):
+    """Distributed-conquer entry point: one shard_map launch over the 1-D
+    solver mesh.  Module-level jit like `_executor`, with the mesh as a
+    static argument (cached Mesh objects in `_solver_mesh` keep it a
+    stable cache key), so same-mesh traffic never retraces.
+    """
+    from repro.compat import shard_map as _shard_map
+    from repro.dist.sharding import SOLVER_AXIS
+    EXECUTOR_TRACES.increment()
+    body = functools.partial(
+        _br._br_dc_sharded_batch, shards=shards, axis_name=SOLVER_AXIS,
+        leaf=leaf, chunk=chunk, niter=niter, use_zhat=use_zhat,
+        return_boundary=return_boundary, tol_factor=tol_factor,
+        stream_threshold=stream_threshold, deflate_budget=deflate_budget,
+        resident_threshold=resident_threshold, fused=fused,
+        compress_halo=compress_halo)
+    sliced = PartitionSpec(None, SOLVER_AXIS)
+    # Outputs are genuinely replicated: everything past the transition
+    # all-gather is computed identically on every device (the replication
+    # checker cannot prove that through ppermute/axis_index, hence off).
+    mapped = _shard_map(body, mesh=mesh,
+                        in_specs=(sliced, sliced, PartitionSpec()),
+                        out_specs=PartitionSpec(), check_vma=False)
+    return mapped(d_pad, e_pad, track)
+
+
 @dataclasses.dataclass(frozen=True)
 class SolvePlan:
     """Static solve schedule for one (padded N, batch bucket) class."""
@@ -223,6 +350,12 @@ class SolvePlan:
     @property
     def batch_bucket_size(self) -> int:
         return self.key.batch_bucket
+
+    @property
+    def devices(self) -> int:
+        """Shard count of the 1-D solver mesh this plan launches on
+        (1 == the classic single-device executor)."""
+        return self.key.shards
 
     @property
     def state_bytes(self) -> int:
@@ -297,20 +430,43 @@ class SolvePlan:
         else:
             track = None
 
-        sharding = _batch_sharding(Bb)
-        if sharding is not None:
-            d_pad = jax.device_put(d_pad, sharding)
-            e_pad = jax.device_put(e_pad, sharding)
+        if key.shards > 1:
+            # Distributed conquer: the *problem* axis is sharded over the
+            # 1-D solver mesh (batch sharding does not compose with it --
+            # every device works on every problem's slice).
+            mesh = _solver_mesh(key.shards)
+            sliced = NamedSharding(
+                mesh, PartitionSpec(None, _dist_axis()))
+            d_pad = jax.device_put(d_pad, sliced)
+            e_pad = jax.device_put(e_pad, sliced)
             if track is not None:
-                track = jax.device_put(track, sharding)
+                track = jax.device_put(
+                    track, NamedSharding(mesh, PartitionSpec()))
+            lam, rows, kprimes = _executor_sharded(
+                d_pad, e_pad, track, mesh=mesh, shards=key.shards,
+                compress_halo=key.compress_halo, leaf=key.leaf,
+                chunk=key.chunk, niter=key.niter, use_zhat=key.use_zhat,
+                return_boundary=key.return_boundary,
+                tol_factor=key.tol_factor,
+                stream_threshold=key.stream_threshold,
+                deflate_budget=key.deflate_budget,
+                resident_threshold=key.resident_threshold, fused=key.fused)
+        else:
+            sharding = _batch_sharding(Bb)
+            if sharding is not None:
+                d_pad = jax.device_put(d_pad, sharding)
+                e_pad = jax.device_put(e_pad, sharding)
+                if track is not None:
+                    track = jax.device_put(track, sharding)
 
-        lam, rows, kprimes = _executor(
-            d_pad, e_pad, track, leaf=key.leaf, chunk=key.chunk,
-            niter=key.niter, use_zhat=key.use_zhat,
-            return_boundary=key.return_boundary, tol_factor=key.tol_factor,
-            stream_threshold=key.stream_threshold,
-            deflate_budget=key.deflate_budget,
-            resident_threshold=key.resident_threshold, fused=key.fused)
+            lam, rows, kprimes = _executor(
+                d_pad, e_pad, track, leaf=key.leaf, chunk=key.chunk,
+                niter=key.niter, use_zhat=key.use_zhat,
+                return_boundary=key.return_boundary,
+                tol_factor=key.tol_factor,
+                stream_threshold=key.stream_threshold,
+                deflate_budget=key.deflate_budget,
+                resident_threshold=key.resident_threshold, fused=key.fused)
         _br.SOLVE_COUNTER.increment()
 
         if _br.SOLVE_COUNTER.deflation_enabled:
@@ -465,7 +621,8 @@ def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
               stream_threshold: int | None = None,
               deflate_budget: int | None = None,
               resident_threshold: int | None = None, fused: bool = True,
-              dtype=None) -> SolvePlan:
+              dtype=None, mesh="auto",
+              compress_halo: bool = False) -> SolvePlan:
     """Build (or fetch) the SolvePlan for an (n, batch) request class.
 
     Bucketing: ``batch`` rounds up to the next power of two and ``n`` is
@@ -480,7 +637,8 @@ def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
         n, leaf=leaf, chunk=chunk, niter=niter, use_zhat=use_zhat,
         return_boundary=return_boundary, tol_factor=tol_factor,
         stream_threshold=stream_threshold, deflate_budget=deflate_budget,
-        resident_threshold=resident_threshold, fused=fused, dtype=dtype)
+        resident_threshold=resident_threshold, fused=fused, dtype=dtype,
+        mesh=mesh, compress_halo=compress_halo)
     return plan_for_route(route, batch)
 
 
@@ -578,8 +736,12 @@ def plan_cache_stats() -> dict:
     plan's ``state_bytes`` model -- what a simultaneous full-bucket launch
     of every cached executable would hold resident)."""
     with _PLAN_LOCK:
+        mesh_buckets: dict[int, int] = {}
+        for k in _PLAN_CACHE:
+            mesh_buckets[k.shards] = mesh_buckets.get(k.shards, 0) + 1
         return {"size": len(_PLAN_CACHE), "hits": _STATS["hits"],
                 "misses": _STATS["misses"],
+                "mesh_buckets": mesh_buckets,
                 "executor_traces": EXECUTOR_TRACES.count,
                 "state_bytes": sum(p.state_bytes
                                    for p in _PLAN_CACHE.values()),

@@ -49,7 +49,14 @@ _PLANNED_METHODS = ("br", "bisect")
 class SolveRequest:
     """One eigensolve, as data.  ``knobs`` holds the solver keywords of
     the matching sync entry point (leaf, chunk, niter, ... for "br";
-    maxiter, polish for "bisect"/range; dtype for any)."""
+    maxiter, polish for "bisect"/range; dtype for any).
+
+    Distributed conquer rides the same knobs: "br" requests accept
+    ``mesh`` (default "auto": huge-n problems shard over the visible
+    devices, see ``plan.DIST_AUTO_MIN_N``) and ``compress_halo``.  The
+    shard count lands in the route key, so the serving scheduler
+    coalesces same-mesh traffic and never mixes mesh shapes in a flush.
+    """
     d: Any
     e: Any
     kind: str = "full"

@@ -279,6 +279,50 @@ def secular_solve(d, z2, rho, kprime, *, niter: int = DEFAULT_NITER,
     return origin.reshape(-1)[:K], tau.reshape(-1)[:K]
 
 
+def secular_solve_window(d, z2, rho, kprime, start, nroots: int, *,
+                         niter: int = DEFAULT_NITER, chunk: int = 128,
+                         dense: bool = False):
+    """Solve a contiguous window of ``nroots`` secular roots.
+
+    The root-sharding primitive of the distributed conquer phase: each
+    device of the solver mesh solves roots ``[start, start + nroots)`` of
+    a cooperative merge and the windows are all-gathered back into the
+    full (origin, tau) arrays.  ``start`` may be traced (it is the device
+    index times the window width inside a shard_map body); ``nroots`` is
+    static.  Per-root arithmetic is exactly :func:`_solve_chunk`'s --
+    every root's iteration depends only on its own index plus the full
+    (d, z2) pole state, so a window solve is bit-identical to the same
+    roots of a full :func:`secular_solve` regardless of how either call
+    tiles the root axis.
+
+    Returns (origin (nroots,) int32, tau (nroots,)).
+    """
+    start = jnp.asarray(start, jnp.int32)
+    if dense or nroots <= chunk:
+        jc = start + jnp.arange(nroots, dtype=jnp.int32)
+        return _solve_chunk(jc, d, z2, rho, kprime, niter)
+    C = min(chunk, nroots)
+    Kp = _pad_len(nroots, C)
+    idx = start + jnp.arange(Kp, dtype=jnp.int32).reshape(-1, C)
+    fn = functools.partial(_solve_chunk, d=d, z2=z2, rho=rho,
+                           kprime=kprime, niter=niter)
+    origin, tau = jax.lax.map(lambda j: fn(j), idx)
+    return origin.reshape(-1)[:nroots], tau.reshape(-1)[:nroots]
+
+
+def secular_solve_window_batched(d, z2, rho, kprime, start, nroots: int, *,
+                                 niter: int = DEFAULT_NITER,
+                                 chunk: int = 128, dense: bool = False):
+    """Problem-batched window solve: d, z2 (B, K); rho, kprime (B,);
+    ``start`` scalar (the same window of every problem in the batch --
+    the cooperative level's layout).  Returns (origin (B, nroots) int32,
+    tau (B, nroots))."""
+    fn = functools.partial(secular_solve_window, nroots=nroots, niter=niter,
+                           chunk=chunk, dense=dense)
+    return jax.vmap(fn, in_axes=(0, 0, 0, 0, None))(d, z2, rho, kprime,
+                                                    start)
+
+
 def secular_solve_batched(d, z2, rho, kprime, *, niter: int = DEFAULT_NITER,
                           chunk: int = 128, dense: bool = False):
     """Problem-batched secular solve: one launch for B independent merges.

@@ -43,6 +43,23 @@ def _compress_one(g, err, axis_name):
     return mean.astype(g.dtype), g32 - deq
 
 
+def quantize_lanes(x):
+    """Stateless int8 quantization over the last axis, one f32 scale per
+    leading-dims lane.  Used by the solver's boundary-row halo
+    (`dist.sharding.gather_tree_state`), where the transfer is one-shot
+    and there is no next step to carry a residual into."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / _QMAX
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(x32 / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_lanes(q, scale, dtype=jnp.float32):
+    """Inverse of `quantize_lanes` (up to the quantization error)."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
 def compressed_cross_pod_mean(grads, state: CompressionState, axis_name: str):
     """Mean of `grads` over `axis_name` via int8 + error feedback.
 

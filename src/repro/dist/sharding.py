@@ -26,6 +26,7 @@ import math
 from typing import Any, Iterable, Optional
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 # ---------------------------------------------------------------------------
@@ -248,6 +249,73 @@ def constrain_batch_acts(x):
     spec = [None] * x.ndim
     spec[0] = _visible_dp_axes(mesh, x.shape[0])
     return _constrain(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Solver-tree collectives (distributed conquer, core/br_dc.py)
+# ---------------------------------------------------------------------------
+#
+# The eigensolver's 1-D mesh has a single axis named SOLVER_AXIS; each
+# device owns one contiguous slice of the tridiagonal.  Because the
+# conquer phase carries only O(n) state (eigenvalues + r boundary rows),
+# every cross-device transfer below is linear in the slice size: a
+# one-element halo in the divide step and a single all-gather of the
+# per-shard (lam, rows) state at the subtree->cooperative transition.
+
+SOLVER_AXIS = "shard"
+
+
+def halo_from_left(x, size: int, axis_name: str = SOLVER_AXIS):
+    """Shift `x` one shard to the right along the solver axis.
+
+    ``size`` is the static axis extent (older jax has no lax.axis_size).
+    Device p receives device p-1's value; device 0 receives zeros (the
+    ppermute fill), which is exactly right for the divide step's
+    left-edge coupling -- the global problem has no boundary left of
+    shard 0.
+    """
+    perm = [(i, i + 1) for i in range(size - 1)]
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+def gather_lanes(x, axis_name: str = SOLVER_AXIS):
+    """All-gather per-shard trailing lanes into global order.
+
+    x: (B, k) per device -> (B, P * k), with shard p's lanes occupying
+    columns [p*k, (p+1)*k) -- the global node order of the D&C tree,
+    since shard-local nodes are contiguous in it.
+    """
+    g = jax.lax.all_gather(x, axis_name)            # (P, B, k)
+    return jnp.moveaxis(g, 0, 1).reshape(x.shape[0], -1)
+
+
+def gather_tree_state(lam_loc, rows_loc, axis_name: str = SOLVER_AXIS,
+                      *, compress: bool = False):
+    """Gather the O(n) subtree state into replicated node-major layout.
+
+    lam_loc: (B, Np); rows_loc: (B, r, Np) -- one device's subtree root.
+    Returns (lam (B, P, Np), rows (B, P, r, Np)) replicated on every
+    device, the node axis ordered by shard index.
+
+    With ``compress=True`` the boundary rows travel as int8 + one f32
+    scale per (problem, slot) lane (`dist.compression.quantize_lanes`);
+    eigenvalues always travel at full precision -- they seed the secular
+    poles, where a quantization ulp would perturb every root.  The halo
+    is a one-shot transfer, so the error-feedback residual the gradient
+    path carries across steps has nowhere to accumulate here; the bias
+    is bounded by a single quantization step.
+    """
+    from repro.dist import compression as _comp
+
+    lam_g = jnp.moveaxis(jax.lax.all_gather(lam_loc, axis_name), 0, 1)
+    if compress:
+        q, scale = _comp.quantize_lanes(rows_loc)
+        q_g, scale_g = jax.lax.all_gather((q, scale), axis_name)
+        rows_g = _comp.dequantize_lanes(q_g, scale_g, rows_loc.dtype)
+        rows_g = jnp.moveaxis(rows_g, 0, 1)
+    else:
+        rows_g = jnp.moveaxis(jax.lax.all_gather(rows_loc, axis_name), 0, 1)
+    return lam_g, rows_g
 
 
 def constrain_seq_model_acts(x):

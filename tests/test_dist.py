@@ -1,0 +1,245 @@
+"""Distributed-conquer tests: sharded solves, solver-mesh routing, and
+the hardened production-mesh factorization.
+
+The single-device half (routing validation, factorization rules, halo
+quantizer) runs everywhere, tier-1 included.  The multi-device matrix --
+P in {2, 4} vs single-device equality, sharded serve flushes, no-retrace
+-- activates when at least 4 devices are visible; CI runs this file
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+
+The load-bearing property is *bit-identity*: the sharded path reorders
+no floating-point reduction of the single-device path (scatter-add
+grouping in the divide step, per-root secular windows, replicated merge
+head and post-pass), so every family must match exactly -- the
+8 eps ||T|| acceptance tolerance is asserted too, but as a floor, not
+the target.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (FAMILIES, clear_plan_cache, eigvalsh_tridiagonal,
+                        eigvalsh_tridiagonal_batch, make_family,
+                        plan_cache_stats)
+from repro.core import plan as _plan
+from repro.dist import compression as _comp
+from repro.launch.mesh import make_solver_mesh, mesh_shape_for
+
+EPS = np.finfo(np.float64).eps
+DEVICES = jax.device_count()
+
+multi = pytest.mark.skipif(
+    DEVICES < 4, reason="needs >= 4 (forced host) devices; run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+
+def _norm(d, e):
+    return np.max(np.abs(d)) + (2.0 * np.max(np.abs(e)) if len(e) else 0.0)
+
+
+def _problem(n, seed=0):
+    rng = np.random.default_rng(seed + n)
+    return rng.normal(size=n), rng.normal(size=n - 1)
+
+
+# ------------------------------------------------- mesh factorization
+
+
+@pytest.mark.parametrize("devices,kw,want", [
+    (1, {}, (1, 1)),
+    (48, {}, (3, 16)),                      # classic: 16-way TP
+    (6, {}, (1, 6)),                        # non-pow2: largest divisor
+    (12, {"model_parallel": 8}, (2, 6)),
+    (9, {"model_parallel": 4}, (3, 3)),     # odd: old //=2 loop missed 3
+    (7, {"model_parallel": 4}, (7, 1)),     # prime: data-parallel only
+    (8, {"model_parallel": 2, "pods": 2}, (2, 2, 2)),
+    (8, {"model_parallel": 2, "pods": 3}, (4, 2)),   # pod doesn't divide
+])
+def test_mesh_shape_for_factorizations(devices, kw, want):
+    shape, axes = mesh_shape_for(devices, **kw)
+    assert shape == want
+    assert len(axes) == len(shape)
+    assert int(np.prod(shape)) == devices
+
+
+@pytest.mark.parametrize("devices", range(1, 41))
+def test_mesh_shape_for_always_exact(devices):
+    """Every count factorizes exactly -- no dropped or invented devices."""
+    for mp in (1, 3, 16):
+        shape, _ = mesh_shape_for(devices, model_parallel=mp)
+        assert int(np.prod(shape)) == devices
+        assert all(s >= 1 for s in shape)
+
+
+@pytest.mark.parametrize("devices,kw", [
+    (0, {}), (-4, {}),
+    (8, {"model_parallel": 0}), (8, {"pods": 0}),
+])
+def test_mesh_shape_for_rejects_degenerate(devices, kw):
+    with pytest.raises(ValueError):
+        mesh_shape_for(devices, **kw)
+
+
+def test_make_solver_mesh_validates():
+    with pytest.raises(ValueError, match="power of two"):
+        make_solver_mesh(3)
+    with pytest.raises(ValueError):
+        make_solver_mesh(0)
+    too_many = 1 << DEVICES.bit_length()    # smallest pow2 > DEVICES
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        make_solver_mesh(too_many)
+
+
+@pytest.mark.skipif(DEVICES < 2, reason="needs >= 2 devices")
+def test_make_solver_mesh_shape():
+    mesh = make_solver_mesh(2)
+    assert dict(mesh.shape) == {"shard": 2}
+
+
+# ---------------------------------------------------------- routing
+
+
+def test_auto_routing_below_floor_is_single_device():
+    assert _plan.resolve_solve_route(1024).shards == 1
+    assert _plan.resolve_solve_route(1024, mesh="auto").shards == 1
+    assert _plan.resolve_solve_route(1024, mesh=None).shards == 1
+    assert _plan.resolve_solve_route(1024, mesh=1).shards == 1
+
+
+def test_auto_routing_huge_n_uses_devices():
+    want = 1 << (DEVICES.bit_length() - 1)  # largest pow2 <= devices
+    assert _plan.resolve_solve_route(_plan.DIST_AUTO_MIN_N).shards == want
+
+
+def test_explicit_mesh_validates_hard():
+    with pytest.raises(ValueError, match="power of two"):
+        _plan.resolve_solve_route(16384, mesh=3)
+    too_many = 1 << DEVICES.bit_length()
+    with pytest.raises(ValueError, match="devices"):
+        _plan.resolve_solve_route(16384, mesh=too_many)
+    with pytest.raises(ValueError, match="mesh"):
+        _plan.resolve_solve_route(16384, mesh="typo")
+
+
+@multi
+def test_explicit_mesh_needs_enough_leaves():
+    # N=64 with leaf=32 has two leaves: four shards cannot each own one.
+    with pytest.raises(ValueError, match="leaves"):
+        _plan.resolve_solve_route(64, leaf=32, mesh=4)
+
+
+def test_compress_halo_normalized_off_single_device():
+    route = _plan.resolve_solve_route(1024, mesh=1, compress_halo=True)
+    assert route.shards == 1 and route.compress_halo is False
+    # ... so it cannot split the single-device cache bucket.
+    assert route == _plan.resolve_solve_route(1024, mesh=1)
+
+
+def test_run_py_mesh_flag_validates_before_jax():
+    from benchmarks import run as bench_run
+    with pytest.raises(SystemExit):            # non-pow2 rejected by argparse
+        bench_run.main(["--mesh", "3"])
+    with pytest.raises(SystemExit):            # conflicting host-devices
+        bench_run.main(["--mesh", "4", "--host-devices", "2"])
+    # jax is already initialized in this process: a clear error, never a
+    # silent single-device fallback.
+    with pytest.raises(RuntimeError, match="jax"):
+        bench_run.main(["--mesh", "4"])
+
+
+# ----------------------------------------------------- halo compression
+
+
+def test_quantize_lanes_roundtrip_bound():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(3, 2, 64)) * 10.0
+    q, scale = _comp.quantize_lanes(x)
+    assert np.asarray(q).dtype == np.int8
+    deq = np.asarray(_comp.dequantize_lanes(q, scale, x.dtype))
+    # Rounding to the int8 grid: error at most half a quantization step.
+    assert np.max(np.abs(x - deq) / np.asarray(scale)) <= 0.5 + 1e-6
+
+
+# ------------------------------------------------- sharded vs single
+
+
+@multi
+@pytest.mark.parametrize("P", [2, 4])
+@pytest.mark.parametrize("family", FAMILIES)
+def test_sharded_matches_single_device(family, P):
+    d, e = make_family(family, 257)
+    lam1 = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8, mesh=1))
+    lamP = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8, mesh=P))
+    # Acceptance bar ...
+    np.testing.assert_allclose(lamP, lam1, rtol=0,
+                               atol=8.0 * EPS * max(1.0, _norm(d, e)))
+    # ... and the design property: nothing in the sharded path reorders
+    # a floating-point reduction, so the match is exact.
+    assert np.array_equal(lamP, lam1)
+
+
+@multi
+def test_sharded_boundary_rows_padded_batch():
+    rng = np.random.default_rng(1)
+    n = 700                                   # pads: track-slot plumbing
+    d = rng.normal(size=(3, n))
+    e = rng.normal(size=(3, n - 1))
+    r1 = eigvalsh_tridiagonal_batch(d, e, return_boundary=True, mesh=1)
+    r4 = eigvalsh_tridiagonal_batch(d, e, return_boundary=True, mesh=4)
+    assert np.array_equal(np.asarray(r1.eigenvalues),
+                          np.asarray(r4.eigenvalues))
+    assert np.array_equal(np.asarray(r1.blo), np.asarray(r4.blo))
+    assert np.array_equal(np.asarray(r1.bhi), np.asarray(r4.bhi))
+
+
+@multi
+def test_compress_halo_off_is_bit_identical_and_on_is_lossy():
+    d, e = _problem(700)
+    lam1 = np.asarray(eigvalsh_tridiagonal(d, e, mesh=1))
+    default = np.asarray(eigvalsh_tridiagonal(d, e, mesh=4))
+    explicit_off = np.asarray(
+        eigvalsh_tridiagonal(d, e, mesh=4, compress_halo=False))
+    assert np.array_equal(default, lam1)      # the pinned default path
+    assert np.array_equal(explicit_off, lam1)
+    lossy = np.asarray(
+        eigvalsh_tridiagonal(d, e, mesh=4, compress_halo=True))
+    # int8 rows perturb the coupling vectors: small but visible error.
+    assert np.max(np.abs(lossy - lam1)) <= 0.05 * _norm(d, e)
+
+
+# ------------------------------------------------- cache and serving
+
+
+@multi
+def test_no_retrace_on_repeated_same_mesh_traffic():
+    d, e = _problem(300, seed=5)
+    eigvalsh_tridiagonal(d, e, mesh=4)        # warm the (N, P) bucket
+    before = _plan.EXECUTOR_TRACES.count
+    for shift in (0.5, -1.0, 2.0):
+        eigvalsh_tridiagonal(d + shift, e, mesh=4)
+    assert _plan.EXECUTOR_TRACES.count == before
+
+
+@multi
+def test_mesh_buckets_in_plan_cache_stats():
+    clear_plan_cache()
+    p1 = _plan.make_plan(300, mesh=1)
+    p2 = _plan.make_plan(300, mesh=2)
+    p4 = _plan.make_plan(300, mesh=4)
+    assert (p1.devices, p2.devices, p4.devices) == (1, 2, 4)
+    assert plan_cache_stats()["mesh_buckets"] == {1: 1, 2: 1, 4: 1}
+
+
+@multi
+def test_serve_flush_lands_on_sharded_route():
+    from repro.serve import EigensolverClient
+    probs = [_problem(n, seed=3) for n in (257, 300, 420)]
+    with EigensolverClient(max_batch=8, max_wait_us=100_000) as client:
+        futs = [client.solve_async(d, e, mesh=2) for d, e in probs]
+        results = [f.result(timeout=300) for f in futs]
+    for (d, e), res in zip(probs, results):
+        want = np.asarray(eigvalsh_tridiagonal(d, e, mesh=2))
+        assert np.array_equal(np.asarray(res.eigenvalues), want)
