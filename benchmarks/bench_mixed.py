@@ -1,0 +1,74 @@
+"""Mixed-precision pipeline: f64 tree vs f32 tree vs f32+certified-refine.
+
+Three rows per size over the full-spectrum resident/fused configuration:
+
+  * ``mixed_f64_n{..}``   -- the default double-precision tree (baseline);
+  * ``mixed_f32_n{..}``   -- the raw f32 tree (dtype=float32, native):
+    the speed ceiling, but only ~1e-6 absolute accuracy;
+  * ``mixed_mixed_n{..}`` -- precision="mixed": the f32 tree plus the f64
+    Sturm certification / cluster polish.  Derived stats carry the
+    speedup over f64, the max |mixed - f64| error in eps_f64 * ||T||
+    units (the acceptance bar is <= 64), and the refinement gauge's
+    polished-lane fraction + polish iterations
+    (``SOLVE_COUNTER.measure(refinement=True)``) -- the pipeline's
+    effective-work lever, exactly like the deflation ratio is the merge
+    tree's.
+
+Rows feed BENCH_mixed.json via
+``python -m benchmarks.run --only mixed --json BENCH_mixed.json``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core import make_family
+from repro.core.br_dc import SOLVE_COUNTER, eigvalsh_tridiagonal_br
+
+EPS = np.finfo(np.float64).eps
+
+
+def run(report, quick: bool = False, sizes=None):
+    if sizes is None:
+        sizes = (256, 1024) if quick else (1024, 4096, 16384)
+
+    for n in sizes:
+        d, e = make_family("normal", n)
+        d32 = np.asarray(d, np.float32)
+        e32 = np.asarray(e, np.float32)
+        scale = max(1.0, np.abs(d).max() + 2.0 * np.abs(e).max())
+        # One timed sample at the biggest size (a single f64 solve there
+        # is tens of seconds on CPU); best-of-3 below it.
+        iters = 1 if n >= 16384 else 3
+
+        lam64 = np.asarray(eigvalsh_tridiagonal_br(d, e).eigenvalues)
+        t64 = time_call(
+            lambda: eigvalsh_tridiagonal_br(d, e).eigenvalues,
+            warmup=0, iters=iters)
+        report(f"mixed_f64_n{n}", t64, "baseline f64 tree")
+
+        lam32 = np.asarray(
+            eigvalsh_tridiagonal_br(d32, e32).eigenvalues, np.float64)
+        t32 = time_call(
+            lambda: eigvalsh_tridiagonal_br(d32, e32).eigenvalues,
+            warmup=0, iters=iters)
+        err32 = np.abs(lam32 - lam64).max() / (EPS * scale)
+        report(f"mixed_f32_n{n}", t32,
+               f"raw f32 tree, speedup={t64 / t32:.2f}x, "
+               f"err={err32:.3g}eps")
+
+        with SOLVE_COUNTER.measure(refinement=True) as window:
+            lam_mx = np.asarray(
+                eigvalsh_tridiagonal_br(d, e, precision="mixed").eigenvalues)
+        stats = window.refinement_stats
+        t_mx = time_call(
+            lambda: eigvalsh_tridiagonal_br(
+                d, e, precision="mixed").eigenvalues,
+            warmup=0, iters=iters)
+        err_mx = np.abs(lam_mx - lam64).max() / (EPS * scale)
+        report(f"mixed_mixed_n{n}", t_mx,
+               f"speedup={t64 / t_mx:.2f}x, err={err_mx:.3g}eps, "
+               f"polish_fraction={stats['polish_fraction']:.4f}, "
+               f"polish_iters={stats['iterations']}, "
+               f"rounds={stats['max_rounds']}")

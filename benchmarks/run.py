@@ -89,9 +89,9 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_accuracy, bench_batched, bench_dist,
                             bench_fused, bench_kernels, bench_merge,
-                            bench_partial, bench_scaling, bench_serve,
-                            bench_vs_lazy, bench_vs_sterf, bench_workspace,
-                            roofline)
+                            bench_mixed, bench_partial, bench_scaling,
+                            bench_serve, bench_vs_lazy, bench_vs_sterf,
+                            bench_workspace, roofline)
 
     if args.prewarm:
         from repro.core.plan import prewarm
@@ -134,6 +134,7 @@ def main(argv=None) -> None:
             report, sizes=(512, 1024) if args.quick else (1024, 2048, 4096)),
         "merge": lambda: bench_merge.run(report, quick=args.quick),
         "partial": lambda: bench_partial.run(report, quick=args.quick),
+        "mixed": lambda: bench_mixed.run(report, quick=args.quick),
         "serve": lambda: bench_serve.run(report, quick=args.quick),
         "dist": lambda: bench_dist.run(report, quick=args.quick,
                                        max_shards=args.mesh),

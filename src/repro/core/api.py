@@ -62,7 +62,11 @@ def eigvalsh_tridiagonal(d, e, method: str = "br", **kw):
     contiguous shards over a 1-D device mesh; the default "auto" shards
     huge problems whenever several devices are visible and is a no-op
     otherwise.  ``compress_halo=True`` opts the sharded all-gather into
-    int8 boundary-row compression.  See
+    int8 boundary-row compression.  ``precision="mixed"`` runs the whole
+    D&C tree in f32 and Sturm-certifies / cluster-polishes the
+    eigenvalues back to f64 (``refine_tol`` sets the certification
+    tolerance in eps_f64 * ||T|| units) -- the big-n speed knob when
+    LAPACK-grade f64 output is still required.  See
     :func:`repro.core.br_dc.eigvalsh_tridiagonal_br` for details.
     """
     d = jnp.asarray(d)

@@ -31,6 +31,16 @@ substrate:
                             target indices are a *traced* input, so
                             repeated top-k traffic of any (il, iu) window
                             hits one executable).
+  * ``refine_clusters``  -- the mixed-precision pipeline's f64 stage:
+                            certify approximate (f32-tree) eigenvalues
+                            with ONE sorted f64 count sweep, then polish
+                            only the non-certified clusters with a
+                            bracket-guarded secant/Newton/bisection loop
+                            against the original (d, e) -- the same
+                            freeze-per-bracket pattern as
+                            ``_slice_targets``, with the live set
+                            compacted between launches so refinement cost
+                            is proportional to the miss set, not n.
 
 Memory: O(B * (n + k)) total -- no merge tree, no selected rows; work is
 O(B * k * n) per bisection sweep.  For k << n this undercuts the full
@@ -39,8 +49,13 @@ conquer by the measured multiples in BENCH_partial.json.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.instrument import SolveCounter
 
 # Bisection halvings cap.  The while_loop exits as soon as every bracket
 # is below its tolerance (~53 + log2(spread/scale) halvings at float64);
@@ -53,6 +68,46 @@ DEFAULT_MAX_BISECT = 96
 # bisection tolerance stopped a few ulps short; each step also refines
 # the bracket via its own Sturm count, so the polish can never leave it.
 DEFAULT_POLISH = 2
+
+# Unroll factor of the pivot-recurrence scans.  The recurrence is a
+# sequential dependency chain per shift lane, so unrolling changes loop
+# structure only, never per-lane arithmetic order (counts and derivative
+# sums are bit-identical at any unroll); it cuts the CPU sweep cost
+# ~35-40% at wide lane counts by amortizing the scan's per-step dispatch.
+_SCAN_UNROLL = 8
+
+# Certification tolerance of the mixed-precision pipeline, in units of
+# eps_f64 * max(1, ||T||_inf).  16 keeps the mixed path's contribution at
+# a quarter of the 64-eps cross-library conformance budget: the f64 D&C
+# itself and LAPACK's drivers each deviate up to ~50 eps * ||T|| from one
+# another at n = 4096, so certifying tighter buys nothing observable while
+# costing refinement iterations on every near-degenerate cluster.
+DEFAULT_REFINE_TOL = 16.0
+
+# Certify -> refine rounds cap.  The refine loop's delta-freeze criterion
+# is a heuristic (a tiny secant step near an unresolved pair can freeze a
+# lane early), so soundness comes from *re-certifying* after each refine
+# pass -- certification is sound by construction (count-verified
+# two-sided brackets).  Measured round trajectories collapse after one
+# pass (miss counts [4096, 0] at n = 4096 random); 4 bounds adversarial
+# spectra.
+DEFAULT_REFINE_ROUNDS = 4
+
+# while_loop trips per refine launch before the host loop compacts the
+# live set: long enough to amortize a launch, short enough that lanes
+# converging at the secant's superlinear rate stop paying for stragglers.
+_REFINE_TRIPS = 4
+
+# Refine launches per certify round: 24 launches * 4 trips = 96 bracket
+# halvings even in the pure-bisection worst case -- the same budget as
+# DEFAULT_MAX_BISECT, reached only if both secant and Newton candidates
+# fail every trip.
+_REFINE_MAX_LAUNCHES = 24
+
+# One trace per (batch, lane-bucket) shape of the certify/refine
+# executors -- same contract as plan.EXECUTOR_TRACES; surfaced through
+# plan.plan_cache_stats() and reset by plan.clear_plan_cache().
+REFINE_EXECUTOR_TRACES = SolveCounter("refine_executor_traces")
 
 
 def _pivot_floor(e2, dtype):
@@ -91,7 +146,7 @@ def sturm_count_xla(d, e2, shifts, pivmin):
         return (q, cnt + (q <= 0.0).astype(jnp.int32)), None
 
     (q, cnt), _ = jax.lax.scan(
-        step, (q, cnt), (d[:, 1:].T, e2.T))
+        step, (q, cnt), (d[:, 1:].T, e2.T), unroll=_SCAN_UNROLL)
     return cnt
 
 
@@ -127,7 +182,7 @@ def _count_and_newton(d, e2, x, pivmin):
         return (qn, cnt + (qn <= 0.0).astype(jnp.int32), rn, s + rn), None
 
     (q, cnt, r, s), _ = jax.lax.scan(
-        step, (q, cnt, r, s), (d[:, 1:].T, e2.T))
+        step, (q, cnt, r, s), (d[:, 1:].T, e2.T), unroll=_SCAN_UNROLL)
     return cnt, s
 
 
@@ -223,6 +278,278 @@ def sturm_count(d, e, shifts):
     shifts = jnp.asarray(shifts, d.dtype)
     cnt = _sturm_count_flat(d, e * e, shifts.reshape(-1))
     return cnt.reshape(shifts.shape)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision refinement: f64 Sturm certification + targeted polish
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _certify_executor(d, e2, lam, nvalid, tol_factor):
+    """Certify all approximate eigenvalues with ONE f64 count sweep.
+
+    d: (B, N); e2: (B, N-1); lam: (B, N) approximate eigenvalues (rows may
+    carry decoupled sentinel padding at index >= nvalid[b]); nvalid: (B,)
+    int32 real targets per row; tol_factor: f64 scalar (traced, so one
+    executable serves every tolerance).
+
+    The 2N shifts ``lam_j -+ tol`` are evaluated in one fused sweep;
+    target j is certified iff ``count(lam_j - tol) <= j`` and
+    ``count(lam_j + tol) >= j + 1`` -- i.e. the true lam_j provably lies
+    in ``(lam_j - tol, lam_j + tol]``.  Sorting the evaluated (shift,
+    count) pairs makes the counts monotone, so each target also extracts
+    the TIGHTEST verified bracket the sweep observed anywhere (a
+    neighbour's shift is often far closer than the lane's own +-tol
+    endpoints), which is what lets the refine loop start a few bisections
+    from done.  Returns (cert (B, N) bool, lo (B, N), hi (B, N),
+    tol (B, 1)); non-real lanes certify vacuously.
+    """
+    REFINE_EXECUTOR_TRACES.increment()
+    B, N = d.shape
+    dtype = d.dtype
+    pivmin = _pivot_floor(e2, dtype)
+    j = jnp.arange(N, dtype=jnp.int32)[None, :]
+    valid = j < nvalid[:, None]
+
+    # Per-problem scale masked to real rows: padded sentinel diagonals sit
+    # ABOVE the real Gershgorin bound by construction and would inflate
+    # the tolerance; sentinel couplings are exactly zero, so e2 needs no
+    # mask.
+    e_abs = jnp.sqrt(e2)
+    dmax = jnp.max(jnp.where(valid, jnp.abs(d), 0.0), axis=1, keepdims=True)
+    emax = (jnp.max(e_abs, axis=1, keepdims=True) if e2.shape[1]
+            else jnp.zeros((B, 1), dtype))
+    tol = tol_factor * jnp.finfo(dtype).eps * jnp.maximum(
+        1.0, dmax + 2.0 * emax)
+
+    shifts = jnp.concatenate([lam - tol, lam + tol], axis=1)     # (B, 2N)
+    cnt = sturm_count_xla(d, e2, shifts, pivmin)                 # (B, 2N)
+    cert = (cnt[:, :N] <= j) & (cnt[:, N:] >= j + 1) | ~valid
+
+    order = jnp.argsort(shifts, axis=1)
+    ss = jnp.take_along_axis(shifts, order, axis=1)
+    cs = jnp.take_along_axis(cnt, order, axis=1)
+
+    def brackets(cs_b):
+        # cs_b is monotone nondecreasing along the sorted shifts:
+        # largest evaluated shift with count <= j is a verified lower
+        # bound (lam_j > shift), smallest with count >= j+1 a verified
+        # upper bound (lam_j <= shift).
+        ilo = jnp.searchsorted(cs_b, j[0], side="right") - 1
+        ihi = jnp.searchsorted(cs_b, j[0] + 1, side="left")
+        return ilo, ihi
+
+    ilo, ihi = jax.vmap(brackets)(cs)
+    # Gershgorin fallback at the sweep's extremes (padded rows only widen
+    # the enclosure -- sentinel diagonals raise ghi, never lower glo --
+    # so the unmasked bound stays sound).
+    radius = jnp.zeros_like(d)
+    if e2.shape[1]:
+        radius = radius.at[:, :-1].add(e_abs).at[:, 1:].add(e_abs)
+    glo = jnp.min(d - radius, axis=1, keepdims=True) - pivmin
+    ghi = jnp.max(d + radius, axis=1, keepdims=True) + pivmin
+    lo = jnp.where(ilo >= 0,
+                   jnp.take_along_axis(ss, jnp.maximum(ilo, 0), axis=1), glo)
+    hi = jnp.where(ihi < 2 * N,
+                   jnp.take_along_axis(ss, jnp.minimum(ihi, 2 * N - 1),
+                                       axis=1), ghi)
+    return cert, lo, hi, tol
+
+
+@functools.partial(jax.jit, static_argnames=("maxiter",))
+def _refine_executor(d, e2, x, lo, hi, xp, gp, tgt, live, tol, *, maxiter):
+    """Bracket-guarded f64 polish of the compacted live lanes.
+
+    d: (B, n); e2: (B, n-1); x, lo, hi: (B, k) iterates and count-verified
+    brackets; xp, gp: previous (iterate, g) pair seeding the secant slope
+    (xp == x flags "no history": the slope divides to non-finite and the
+    first trip falls back to Newton); tgt: (B, k) int32 target indices;
+    live: (B, k); tol: (B, 1) certification tolerance.
+
+    Each trip runs ONE fused count+derivative sweep over all lanes.  With
+    s = -sum_k 1/(lam_k - x), the function g(x) = 1/s has a simple zero
+    at each eigenvalue -- but its local slope is NOT 1 near close pairs
+    (g there is ~the harmonic mean of the pole distances), which is why
+    plain Newton ``x - g`` degrades to rate-1/2 linear convergence
+    exactly on the clusters the f32 tree missed.  The secant step
+    ``x - g * (x - xp) / (g - gp)`` measures the true slope and restores
+    superlinear convergence (measured: halves total polish iterations);
+    candidates are accepted only when finite, strictly inside the
+    count-updated bracket, and on a credibly positive slope, falling back
+    to Newton then to the bisection midpoint.  Convergence freezes a
+    lane's entire state (freeze-per-bracket: results never depend on how
+    long stragglers iterate, so refinement is deterministic across
+    live-set compactions).  Returns (x, lo, hi, xp, gp, live, iters).
+    """
+    REFINE_EXECUTOR_TRACES.increment()
+    pivmin = _pivot_floor(e2, d.dtype)
+    tolf = 0.5 * tol     # freeze at half the certification tolerance
+
+    def cond(state):
+        it, x, lo, hi, xp, gp, live, its = state
+        return (it < maxiter) & jnp.any(live)
+
+    def body(state):
+        it, x, lo, hi, xp, gp, live, its = state
+        cnt, s = _count_and_newton(d, e2, x, pivmin)
+        above = cnt > tgt                  # count(x) >= j+1: lam_j <= x
+        nhi = jnp.where(above & live, x, hi)
+        nlo = jnp.where(~above & live, x, lo)
+        g = 1.0 / s
+        cand_n = x - g
+        slope = (g - gp) / (x - xp)
+        cand_s = x - g / slope
+        ok_s = (jnp.isfinite(cand_s) & (cand_s > nlo) & (cand_s < nhi)
+                & (slope > 0.05))
+        ok_n = jnp.isfinite(cand_n) & (cand_n > nlo) & (cand_n < nhi)
+        nx = jnp.where(ok_s, cand_s,
+                       jnp.where(ok_n, cand_n, 0.5 * (nlo + nhi)))
+        conv = (nhi - nlo <= tolf) | (jnp.abs(nx - x) <= 0.25 * tolf)
+        nxp = jnp.where(live, x, xp)
+        ngp = jnp.where(live, g, gp)
+        nx = jnp.where(live, nx, x)
+        its = its + jnp.sum(live, dtype=jnp.int32)
+        return it + 1, nx, nlo, nhi, nxp, ngp, live & ~conv, its
+
+    state = (jnp.asarray(0, jnp.int32), x, lo, hi, xp, gp, live,
+             jnp.asarray(0, jnp.int32))
+    _, x, lo, hi, xp, gp, live, its = jax.lax.while_loop(cond, body, state)
+    return x, lo, hi, xp, gp, live, its
+
+
+def _bucket(k: int) -> int:
+    """Next power of two (min 1) -- lane-count buckets keep the refine
+    executor's trace count logarithmic in n."""
+    return 1 << max(0, (int(k) - 1).bit_length())
+
+
+def _refine_misses(d, e2, lamh, loh, hih, tol_dev, miss):
+    """Host-driven refinement of the miss set with live-lane compaction.
+
+    d, e2: device (B, n)/(B, n-1); lamh, loh, hih: HOST (B, n) float64
+    state arrays (mutated in place: refined lanes are scattered back);
+    tol_dev: (B, 1) device tolerance; miss: host (B, n) bool.
+
+    Every ``_REFINE_TRIPS`` while_loop trips, still-live lanes are
+    gathered to the host, compacted to each problem's live set (padded to
+    the batch max, bucketed to a power of two so launches reuse cached
+    executables), and re-launched -- the full-width sweep cost decays
+    with the live set instead of paying n lanes until the last straggler
+    freezes.  Secant history (xp, gp) is carried across compactions.
+    Freeze-per-bracket makes per-lane trajectories independent of the
+    compaction schedule, so results are deterministic.  Returns total
+    polish iterations.
+    """
+    B, n = miss.shape
+    xph = lamh.copy()      # xp == x: no secant history yet
+    gph = np.zeros_like(lamh)
+    idxs = [np.nonzero(miss[b])[0].astype(np.int32) for b in range(B)]
+    iters = 0
+    for _ in range(_REFINE_MAX_LAUNCHES):
+        kmax = max(len(ix) for ix in idxs)
+        if kmax == 0:
+            break
+        k = min(_bucket(kmax), n)
+        gidx = np.zeros((B, k), np.int32)
+        live = np.zeros((B, k), bool)
+        for b, ix in enumerate(idxs):
+            gidx[b, :len(ix)] = ix
+            live[b, :len(ix)] = True
+        take = lambda a: jnp.asarray(np.take_along_axis(a, gidx, axis=1))
+        x1, lo1, hi1, xp1, gp1, live1, its = _refine_executor(
+            d, e2, take(lamh), take(loh), take(hih), take(xph), take(gph),
+            jnp.asarray(gidx), jnp.asarray(live), tol_dev,
+            maxiter=_REFINE_TRIPS)
+        iters += int(its)
+        x1, lo1, hi1 = np.asarray(x1), np.asarray(lo1), np.asarray(hi1)
+        xp1, gp1, live1 = np.asarray(xp1), np.asarray(gp1), np.asarray(live1)
+        for b in range(B):
+            ix = gidx[b, live[b]]
+            for src, dst in ((x1, lamh), (lo1, loh), (hi1, hih),
+                             (xp1, xph), (gp1, gph)):
+                dst[b, ix] = src[b, live[b]]
+            idxs[b] = gidx[b, live[b] & live1[b]]
+    return iters
+
+
+def refine_clusters(d, e, lam, *, nvalid=None,
+                    tol_factor: float = DEFAULT_REFINE_TOL,
+                    rounds: int = DEFAULT_REFINE_ROUNDS, sort: bool = True):
+    """Sturm-certified f64 refinement of approximate eigenvalues.
+
+    The mixed-precision pipeline's second stage: ``lam`` holds all n
+    eigenvalue estimates of each problem (typically the f32 D&C tree's
+    output, upcast), and this stage makes them meet the documented
+    ``tol_factor * eps_f64 * max(1, ||T||_inf)`` bound against the
+    original float64 (d, e) -- certifying everything with one f64 count
+    sweep per round and polishing ONLY the non-certified clusters, so the
+    f64 work is proportional to the miss set.
+
+    Args:
+      d: (B, n) float64 diagonals (rows may carry decoupled sentinel
+        padding above ``nvalid[b]`` -- the plan/serve padding convention;
+        sentinel lanes are never touched).
+      e: (B, n-1) float64 off-diagonals.
+      lam: (B, n) approximate eigenvalues, ascending per problem.
+      nvalid: optional (B,) int32 count of real eigenvalues per row
+        (default: n).
+      tol_factor: certification tolerance in eps_f64 * ||T|| units.
+      rounds: certify->refine rounds cap (see DEFAULT_REFINE_ROUNDS; the
+        loop exits as soon as a certify pass accepts every target, which
+        is what makes the heuristic freeze criteria sound).
+      sort: re-sort each row ascending before returning (refined values
+        each lie within tol of the sorted truth, so the sort restores
+        exact ordering without breaking any per-index bound).  Callers
+        that must permute companion state identically -- boundary rows --
+        pass False and apply their own argsort.
+
+    Returns:
+      (lam_refined (B, n) float64, info) with info keys ``targets``
+      (real eigenvalues certified), ``polished`` (lanes refined),
+      ``iterations`` (total polish sweeps), ``rounds`` (certify->refine
+      rounds that found misses), and ``polished_mask`` (host (B, n) bool:
+      exactly the lanes the polish loop touched -- unset lanes are
+      returned bit-identical to their input).
+    """
+    if not jax.config.jax_enable_x64:
+        raise ValueError(
+            "refine_clusters certifies against float64 Sturm counts; "
+            "enable jax_enable_x64 (see the README mixed-precision "
+            "runbook)")
+    d = jnp.asarray(d, jnp.float64)
+    e = jnp.asarray(e, jnp.float64)
+    lam = jnp.asarray(lam, jnp.float64)
+    B, n = d.shape
+    e2 = e * e
+    nvalid_arr = (jnp.full((B,), n, jnp.int32) if nvalid is None
+                  else jnp.asarray(nvalid, jnp.int32))
+    tol_arr = jnp.asarray(float(tol_factor), jnp.float64)
+
+    polished_mask = np.zeros((B, n), bool)
+    iters = 0
+    rounds_used = 0
+    lamh = None
+    for _ in range(max(1, int(rounds))):
+        cert, lo, hi, tol_dev = _certify_executor(d, e2, lam, nvalid_arr,
+                                                  tol_arr)
+        miss = ~np.asarray(cert)
+        if not miss.any():
+            break
+        rounds_used += 1
+        polished_mask |= miss
+        lamh = np.asarray(lam).copy()
+        iters += _refine_misses(d, e2, lamh, np.asarray(lo).copy(),
+                                np.asarray(hi).copy(), tol_dev, miss)
+        lam = jnp.asarray(lamh)
+    if sort:
+        lam = jnp.sort(lam, axis=1)
+    info = {"targets": int(np.asarray(
+                jnp.sum(jnp.minimum(nvalid_arr, n)))),
+            "polished": int(polished_mask.sum()),
+            "iterations": iters, "rounds": rounds_used,
+            "polished_mask": polished_mask}
+    return lam, info
 
 
 def _validate_index_range(n: int, il, iu):

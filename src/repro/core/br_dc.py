@@ -364,7 +364,7 @@ def _as_batch(d, e, dtype):
 
 
 def eigvalsh_tridiagonal_batch(d, e, *, leaf: int = 32, chunk: int = 256,
-                               niter: int = DEFAULT_NITER,
+                               niter: int | None = None,
                                use_zhat: bool = True,
                                return_boundary: bool = False,
                                tol_factor: float = 8.0,
@@ -373,7 +373,10 @@ def eigvalsh_tridiagonal_batch(d, e, *, leaf: int = 32, chunk: int = 256,
                                resident_threshold: int | None = None,
                                fused: bool = True,
                                dtype=None, mesh="auto",
-                               compress_halo: bool = False) -> BRBatchResult:
+                               compress_halo: bool = False,
+                               precision: str = "native",
+                               refine_tol: float | None = None
+                               ) -> BRBatchResult:
     """All eigenvalues of B independent symmetric tridiagonals at once.
 
     One executor launch, one XLA program, B * O(n) persistent state: the
@@ -394,6 +397,8 @@ def eigvalsh_tridiagonal_batch(d, e, *, leaf: int = 32, chunk: int = 256,
     Returns:
       BRBatchResult with eigenvalues (B, n) ascending per problem.
     """
+    if precision == "mixed" and dtype is None:
+        dtype = jnp.float64   # mixed certifies / returns in f64
     d, e = _as_batch(d, e, dtype)
     B, n = d.shape
     if n == 1:
@@ -409,12 +414,13 @@ def eigvalsh_tridiagonal_batch(d, e, *, leaf: int = 32, chunk: int = 256,
                         stream_threshold=stream_threshold,
                         deflate_budget=deflate_budget,
                         resident_threshold=resident_threshold, fused=fused,
-                        dtype=d.dtype, mesh=mesh, compress_halo=compress_halo)
+                        dtype=d.dtype, mesh=mesh, compress_halo=compress_halo,
+                        precision=precision, refine_tol=refine_tol)
     return p.execute(d, e)
 
 
 def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
-                            niter: int = DEFAULT_NITER,
+                            niter: int | None = None,
                             use_zhat: bool = True,
                             return_boundary: bool = False,
                             tol_factor: float = 8.0,
@@ -423,7 +429,9 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
                             resident_threshold: int | None = None,
                             fused: bool = True,
                             dtype=None, mesh="auto",
-                            compress_halo: bool = False) -> BRResult:
+                            compress_halo: bool = False,
+                            precision: str = "native",
+                            refine_tol: float | None = None) -> BRResult:
     """All eigenvalues of the symmetric tridiagonal (d, e) via boundary-row D&C.
 
     O(n) auxiliary memory; same secular merges as conventional D&C
@@ -435,7 +443,10 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
       d: (n,) diagonal.  e: (n-1,) off-diagonal.
       leaf: leaf block size (power-of-two tree is built above it).
       chunk: streaming chunk for secular/row updates (memory knob).
-      niter: fixed secular iteration budget.
+      niter: fixed secular iteration budget.  None picks the precision's
+        default: ``secular.DEFAULT_NITER`` for native trees,
+        ``secular.DEFAULT_NITER_F32`` for f32/mixed trees (single
+        precision hits its accuracy floor in fewer iterations).
       use_zhat: Gu-Eisenstat weight reconstruction for propagated rows.
       return_boundary: also return (blo, bhi) of the full eigenvector matrix
         (propagates rows through the root merge -- tests/consumers).  Costs
@@ -467,9 +478,25 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
       compress_halo: int8-compress the boundary rows in the sharded
         path's subtree->cooperative all-gather (off by default; the
         uncompressed sharded path is bit-identical to single-device).
+      precision: "native" (default) runs the tree in the input dtype;
+        "mixed" runs the ENTIRE tree -- leaves, deflation, secular
+        iteration, fused post-pass, resident kernel, sharded halo -- in
+        f32, then certifies every eigenvalue with f64 Sturm counts
+        against the original (d, e) and polishes only the non-certified
+        clusters with bracket-guarded f64 iteration
+        (``bisect.refine_clusters``).  Output is float64 with every
+        eigenvalue within ``refine_tol * eps_f64 * ||T||_1`` of a true
+        eigenvalue.  Requires x64 mode.  Boundary rows under mixed are
+        f32-accurate (cast to f64, permuted with the eigenvalues) --
+        only the eigenvalues are refined.
+      refine_tol: mixed-precision certification tolerance in units of
+        ``eps_f64 * ||T||_1`` (default ``bisect.DEFAULT_REFINE_TOL``);
+        only valid with precision="mixed".
     """
     d = jnp.asarray(d)
     e = jnp.asarray(e)
+    if precision == "mixed" and dtype is None:
+        dtype = jnp.float64   # mixed certifies / returns in f64
     if dtype is not None:
         d = d.astype(dtype)
         e = e.astype(dtype)
@@ -491,7 +518,8 @@ def eigvalsh_tridiagonal_br(d, e, *, leaf: int = 32, chunk: int = 256,
                         stream_threshold=stream_threshold,
                         deflate_budget=deflate_budget,
                         resident_threshold=resident_threshold, fused=fused,
-                        dtype=d.dtype, mesh=mesh, compress_halo=compress_halo)
+                        dtype=d.dtype, mesh=mesh, compress_halo=compress_halo,
+                        precision=precision, refine_tol=refine_tol)
     res = p.execute(d[None, :], e[None, :])
     blo = None if res.blo is None else res.blo[0]
     bhi = None if res.bhi is None else res.bhi[0]

@@ -15,6 +15,15 @@ benchmarks want it visible without re-running the solver.  Recording
 requires a host transfer of the (tiny) per-level kprime arrays, so it is
 gated: only ``measure(deflation=True)`` windows enable it, and the
 steady-state solve path pays nothing.
+
+The **refinement gauge** mirrors it for the mixed-precision pipeline:
+per-solve (targets, polished, polish iterations, certify rounds) from the
+f64 Sturm certification / cluster-polish stage.  The polish fraction is
+the mixed path's effective-work lever exactly like the deflation ratio is
+the merge tree's, and the refinement loop is host-driven anyway (its
+live-set counts already cross to the host), so recording is free --
+gating via ``measure(refinement=True)`` just keeps the bookkeeping out of
+steady-state windows that never read it.
 """
 
 from __future__ import annotations
@@ -70,10 +79,11 @@ class CounterWindow:
     """A read-only view of a :class:`SolveCounter` since a start mark."""
 
     def __init__(self, counter: "SolveCounter", start: int,
-                 deflation_start: int = 0):
+                 deflation_start: int = 0, refinement_start: int = 0):
         self._counter = counter
         self._start = start
         self._deflation_start = deflation_start
+        self._refinement_start = refinement_start
 
     @property
     def count(self) -> int:
@@ -97,6 +107,27 @@ class CounterWindow:
             s[1] += total
         return {level: s[0] / s[1] for level, s in sorted(acc.items())
                 if s[1] > 0}
+
+    @property
+    def refinement_stats(self) -> dict:
+        """Mixed-precision refinement gauge, aggregated over the window.
+
+        Sums the per-solve (targets, polished, iterations) of every
+        mixed-precision solve recorded since the window opened, plus the
+        derived ``polish_fraction`` (polished / targets) and the maximum
+        certify->refine round count seen.  Empty-dict semantics match
+        ``deflation_ratios``: requires ``measure(refinement=True)`` and at
+        least one mixed solve; ``solves`` is 0 otherwise.
+        """
+        events = self._counter.refinement_events(self._refinement_start)
+        targets = sum(e[0] for e in events)
+        polished = sum(e[1] for e in events)
+        iterations = sum(e[2] for e in events)
+        return {"solves": len(events), "targets": targets,
+                "polished": polished,
+                "polish_fraction": polished / targets if targets else 0.0,
+                "iterations": iterations,
+                "max_rounds": max((e[3] for e in events), default=0)}
 
 
 class SolveCounter:
@@ -128,6 +159,8 @@ class SolveCounter:
         self._count = 0
         self._deflation: list[tuple[int, float, int]] = []
         self._deflation_depth = 0
+        self._refinement: list[tuple[int, int, int, int]] = []
+        self._refinement_depth = 0
 
     @property
     def count(self) -> int:
@@ -157,30 +190,61 @@ class SolveCounter:
         with self._lock:
             return list(self._deflation[start:])
 
+    @property
+    def refinement_enabled(self) -> bool:
+        """True while at least one ``measure(refinement=True)`` window is
+        open -- the mixed-precision solve path checks this before
+        recording its per-solve polish statistics."""
+        with self._lock:
+            return self._refinement_depth > 0
+
+    def record_refinement(self, targets: int, polished: int,
+                          iterations: int, rounds: int) -> None:
+        """Record one mixed-precision solve's refinement work: ``targets``
+        real eigenvalues certified, ``polished`` of them refined in f64,
+        ``iterations`` total polish sweeps, over ``rounds`` certify->refine
+        rounds."""
+        with self._lock:
+            self._refinement.append((int(targets), int(polished),
+                                     int(iterations), int(rounds)))
+
+    def refinement_events(self, start: int = 0) -> list:
+        with self._lock:
+            return list(self._refinement[start:])
+
     def reset(self) -> None:
         with self._lock:
             self._count = 0
             self._deflation.clear()
+            self._refinement.clear()
 
     @contextlib.contextmanager
-    def measure(self, deflation: bool = False):
+    def measure(self, deflation: bool = False, refinement: bool = False):
         """Context manager yielding a window counting from entry.
 
         Args:
           deflation: also enable the deflation-ratio gauge while the
             window is open (costs one tiny host transfer per solve).
+          refinement: also enable the mixed-precision refinement gauge
+            (free -- the refinement loop is host-driven already).
         """
         with self._lock:
             start = self._count
             dstart = len(self._deflation)
+            rstart = len(self._refinement)
             if deflation:
                 self._deflation_depth += 1
+            if refinement:
+                self._refinement_depth += 1
         try:
-            yield CounterWindow(self, start, dstart)
+            yield CounterWindow(self, start, dstart, rstart)
         finally:
-            if deflation:
+            if deflation or refinement:
                 with self._lock:
-                    self._deflation_depth -= 1
+                    if deflation:
+                        self._deflation_depth -= 1
+                    if refinement:
+                        self._refinement_depth -= 1
 
     def __int__(self) -> int:
         return self.count

@@ -16,7 +16,8 @@ and owns the process-wide cache of compiled executables, keyed on
 
     (padded N, leaf, batch bucket, dtype, chunk, niter, use_zhat,
      return_boundary, tol_factor, stream_threshold, deflate_budget,
-     resident_threshold, fused, shards, compress_halo)
+     resident_threshold, fused, shards, compress_halo, precision,
+     refine_tol)
 
 Two requests that differ only in original size n (same padded bucket) or
 only in batch size (same power-of-two bucket) share one executable: the
@@ -83,6 +84,15 @@ class PlanKey(NamedTuple):
     # count is a different XLA program, so it must split the cache.
     shards: int = 1
     compress_halo: bool = False
+    # Mixed-precision pipeline: "native" runs the tree in `dtype`;
+    # "mixed" runs the whole tree in f32 and then Sturm-certifies /
+    # polishes the eigenvalues against the original f64 (d, e) to
+    # refine_tol * eps_f64 * ||T||.  `dtype` stays the OUTPUT dtype
+    # (float64 for mixed), so the f32 tree executable is shared with
+    # plain-f32 traffic of the same knobs; refine_tol is normalized to
+    # 0.0 on native routes so it never splits their cache.
+    precision: str = "native"
+    refine_tol: float = 0.0
 
 
 def batch_bucket(batch: int) -> int:
@@ -90,6 +100,16 @@ def batch_bucket(batch: int) -> int:
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
     return 1 << (batch - 1).bit_length()
+
+
+def _refine_default_tol() -> float:
+    from repro.core import bisect as _bis  # deferred: bisect imports plan
+    return _bis.DEFAULT_REFINE_TOL
+
+
+def _refine_traces() -> SolveCounter:
+    from repro.core import bisect as _bis  # deferred: bisect imports plan
+    return _bis.REFINE_EXECUTOR_TRACES
 
 
 # Auto-routing floor: padded problems at least this large pick the
@@ -146,7 +166,7 @@ def _resolve_shards(mesh, padded_n: int, leaf: int) -> int:
 
 
 def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
-                        niter: int = _sec.DEFAULT_NITER,
+                        niter: int | None = None,
                         use_zhat: bool = True,
                         return_boundary: bool = False,
                         tol_factor: float = 8.0,
@@ -155,7 +175,9 @@ def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
                         resident_threshold: int | None = None,
                         fused: bool = True, dtype=None,
                         mesh="auto",
-                        compress_halo: bool = False) -> PlanKey:
+                        compress_halo: bool = False,
+                        precision: str = "native",
+                        refine_tol: float | None = None) -> PlanKey:
     """Resolve a full-spectrum request to its bucketed route key -- pure.
 
     The returned :class:`PlanKey` has every request-determined field
@@ -176,9 +198,47 @@ def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
     path's boundary-row all-gather into int8 compression; it is
     normalized to False on the single-device route so it never splits
     that cache.
+
+    ``precision="mixed"`` routes the mixed-precision pipeline: the D&C
+    tree runs in f32 (the ``dtype`` field stays the OUTPUT dtype,
+    float64) and the eigenvalues are Sturm-certified / cluster-polished
+    to ``refine_tol * eps_f64 * ||T||`` against the original (d, e).
+    ``niter=None`` resolves to the precision's default iteration budget
+    (f32 trees hit their accuracy floor earlier -- see
+    ``secular.DEFAULT_NITER_F32``); an explicit niter always wins.
     """
     if n < 1:
         raise ValueError(f"n must be >= 1, got {n}")
+    if precision not in ("native", "mixed"):
+        raise ValueError(
+            f"precision must be 'native' or 'mixed', got {precision!r}")
+    if precision == "mixed":
+        if not jax.config.jax_enable_x64:
+            raise ValueError(
+                "precision='mixed' certifies against float64 Sturm "
+                "counts; enable jax_enable_x64 first (JAX_ENABLE_X64=1 "
+                "-- see the README mixed-precision runbook)")
+        if dtype is not None and jnp.dtype(dtype) != jnp.dtype(jnp.float64):
+            raise ValueError(
+                f"precision='mixed' returns float64 eigenvalues; dtype "
+                f"must be float64 or None, got {jnp.dtype(dtype).name} "
+                f"(for a pure-f32 solve use dtype=float32 with "
+                f"precision='native')")
+        dtype = jnp.float64
+        refine_tol = float(refine_tol if refine_tol is not None
+                           else _refine_default_tol())
+        if refine_tol <= 0.0:
+            raise ValueError(
+                f"refine_tol must be positive (eps_f64 * ||T|| units), "
+                f"got {refine_tol}")
+    else:
+        if refine_tol is not None:
+            raise ValueError(
+                "refine_tol only applies to precision='mixed' routes")
+        refine_tol = 0.0
+    if niter is None:
+        niter = (_sec.DEFAULT_NITER_F32 if precision == "mixed"
+                 else _sec.DEFAULT_NITER)
     if dtype is None:
         dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
     if stream_threshold is None:
@@ -198,7 +258,8 @@ def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
                    deflate_budget=int(deflate_budget),
                    resident_threshold=int(resident_threshold), fused=fused,
                    shards=shards,
-                   compress_halo=bool(compress_halo) and shards > 1)
+                   compress_halo=bool(compress_halo) and shards > 1,
+                   precision=precision, refine_tol=refine_tol)
 
 
 # Elements per streamed secular tile the CPU path aims for (~2 MiB f64):
@@ -430,6 +491,14 @@ class SolvePlan:
         else:
             track = None
 
+        if key.precision == "mixed":
+            # The whole D&C tree runs in f32; the f64 (d_pad, e_pad) stay
+            # behind for the Sturm certification / cluster polish below.
+            d_run = d_pad.astype(jnp.float32)
+            e_run = e_pad.astype(jnp.float32)
+        else:
+            d_run, e_run = d_pad, e_pad
+
         if key.shards > 1:
             # Distributed conquer: the *problem* axis is sharded over the
             # 1-D solver mesh (batch sharding does not compose with it --
@@ -437,13 +506,13 @@ class SolvePlan:
             mesh = _solver_mesh(key.shards)
             sliced = NamedSharding(
                 mesh, PartitionSpec(None, _dist_axis()))
-            d_pad = jax.device_put(d_pad, sliced)
-            e_pad = jax.device_put(e_pad, sliced)
+            d_run = jax.device_put(d_run, sliced)
+            e_run = jax.device_put(e_run, sliced)
             if track is not None:
                 track = jax.device_put(
                     track, NamedSharding(mesh, PartitionSpec()))
             lam, rows, kprimes = _executor_sharded(
-                d_pad, e_pad, track, mesh=mesh, shards=key.shards,
+                d_run, e_run, track, mesh=mesh, shards=key.shards,
                 compress_halo=key.compress_halo, leaf=key.leaf,
                 chunk=key.chunk, niter=key.niter, use_zhat=key.use_zhat,
                 return_boundary=key.return_boundary,
@@ -454,13 +523,13 @@ class SolvePlan:
         else:
             sharding = _batch_sharding(Bb)
             if sharding is not None:
-                d_pad = jax.device_put(d_pad, sharding)
-                e_pad = jax.device_put(e_pad, sharding)
+                d_run = jax.device_put(d_run, sharding)
+                e_run = jax.device_put(e_run, sharding)
                 if track is not None:
                     track = jax.device_put(track, sharding)
 
             lam, rows, kprimes = _executor(
-                d_pad, e_pad, track, leaf=key.leaf, chunk=key.chunk,
+                d_run, e_run, track, leaf=key.leaf, chunk=key.chunk,
                 niter=key.niter, use_zhat=key.use_zhat,
                 return_boundary=key.return_boundary,
                 tol_factor=key.tol_factor,
@@ -483,10 +552,38 @@ class SolvePlan:
                     level, float(jnp.sum(kp[:B, :nm_real])),
                     B * nm_real * K_level)
 
-        lam = lam[:B, :n]  # sentinels sort above the Gershgorin bound
+        lam = lam[:B]
+        rows_b = rows[:B] if key.return_boundary else None
+        if key.precision == "mixed":
+            # Certify the f32 tree's eigenvalues with f64 Sturm counts
+            # against the ORIGINAL (d, e) and polish only the misses.
+            # Runs on the full padded width: sentinel lanes are exactly
+            # decoupled and certify vacuously (nvalid masks them), so the
+            # padded counts equal the original problem's counts.  The
+            # polish moves each lane by at most refine_tol * eps * ||T||,
+            # which can reorder ties -- one argsort restores ascending
+            # order and (for boundary output) permutes the selected rows
+            # by the identical permutation.
+            from repro.core import bisect as _bis  # deferred: imports plan
+            nvalid = (orig_n if orig_n is not None
+                      else jnp.full((B,), n, jnp.int32))
+            lam_ref, rinfo = _bis.refine_clusters(
+                d_pad[:B], e_pad[:B, : N - 1], lam.astype(dtype),
+                nvalid=nvalid, tol_factor=key.refine_tol, sort=False)
+            order = jnp.argsort(lam_ref, axis=1)
+            lam = jnp.take_along_axis(lam_ref, order, axis=1)
+            if rows_b is not None:
+                rows_b = jnp.take_along_axis(
+                    rows_b.astype(dtype), order[:, None, :], axis=2)
+            if _br.SOLVE_COUNTER.refinement_enabled:
+                _br.SOLVE_COUNTER.record_refinement(
+                    rinfo["targets"], rinfo["polished"],
+                    rinfo["iterations"], rinfo["rounds"])
+
+        lam = lam[:, :n]  # sentinels sort above the Gershgorin bound
         if key.return_boundary:
-            blo = rows[:B, 0, :n]
-            bhi = rows[:B, 2 if track is not None else 1, :n]
+            blo = rows_b[:, 0, :n]
+            bhi = rows_b[:, 2 if track is not None else 1, :n]
         else:
             blo = bhi = None
         return _br.BRBatchResult(lam, blo, bhi,
@@ -616,13 +713,15 @@ _STATS = {"hits": 0, "misses": 0, "range_hits": 0, "range_misses": 0}
 
 
 def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
-              niter: int = _sec.DEFAULT_NITER, use_zhat: bool = True,
+              niter: int | None = None, use_zhat: bool = True,
               return_boundary: bool = False, tol_factor: float = 8.0,
               stream_threshold: int | None = None,
               deflate_budget: int | None = None,
               resident_threshold: int | None = None, fused: bool = True,
               dtype=None, mesh="auto",
-              compress_halo: bool = False) -> SolvePlan:
+              compress_halo: bool = False,
+              precision: str = "native",
+              refine_tol: float | None = None) -> SolvePlan:
     """Build (or fetch) the SolvePlan for an (n, batch) request class.
 
     Bucketing: ``batch`` rounds up to the next power of two and ``n`` is
@@ -638,7 +737,8 @@ def make_plan(n: int, batch: int = 1, *, leaf: int = 32, chunk: int = 256,
         return_boundary=return_boundary, tol_factor=tol_factor,
         stream_threshold=stream_threshold, deflate_budget=deflate_budget,
         resident_threshold=resident_threshold, fused=fused, dtype=dtype,
-        mesh=mesh, compress_halo=compress_halo)
+        mesh=mesh, compress_halo=compress_halo, precision=precision,
+        refine_tol=refine_tol)
     return plan_for_route(route, batch)
 
 
@@ -750,7 +850,8 @@ def plan_cache_stats() -> dict:
                 "range_misses": _STATS["range_misses"],
                 "range_executor_traces": RANGE_EXECUTOR_TRACES.count,
                 "range_state_bytes": sum(p.state_bytes
-                                         for p in _RANGE_CACHE.values())}
+                                         for p in _RANGE_CACHE.values()),
+                "refine_executor_traces": _refine_traces().count}
 
 
 def clear_plan_cache() -> None:
@@ -770,6 +871,7 @@ def clear_plan_cache() -> None:
             _STATS[k] = 0
         EXECUTOR_TRACES.reset()
         RANGE_EXECUTOR_TRACES.reset()
+        _refine_traces().reset()
 
 
 # Workload-spec kind aliases accepted by ``prewarm``; "solve" is the
@@ -799,6 +901,12 @@ def prewarm(workload_spec) -> dict:
     (assert via ``plan_cache_stats()``).  Boundary-row plans execute with
     the per-problem ``orig_n`` track input, matching the serving flush
     form.  The throwaway solves do tick SOLVE_COUNTER.
+
+    dtype / ``precision="mixed"`` knobs flow through untouched, so
+    f32 and mixed traffic prewarms its OWN executables (a mixed spec
+    compiles the f32 tree executor *and* the f64 certify executor --
+    its throwaway solve runs the full certify stage on trivial
+    problems, which certify on the first round).
     Returns ``{"plans": P, "seconds": s, "traces": t}``.
     """
     from repro.core.request import SolveRequest, route_request

@@ -56,6 +56,13 @@ class SolveRequest:
     devices, see ``plan.DIST_AUTO_MIN_N``) and ``compress_halo``.  The
     shard count lands in the route key, so the serving scheduler
     coalesces same-mesh traffic and never mixes mesh shapes in a flush.
+
+    So does the mixed-precision pipeline: "br" requests accept
+    ``precision`` ("native"/"mixed") and ``refine_tol``; both land in the
+    route key, so mixed traffic coalesces with (only) other mixed traffic
+    of the same tolerance and prewarms its own executables.  Mixed
+    requests with no explicit dtype normalize to float64 (the output
+    dtype) before routing.
     """
     d: Any
     e: Any
@@ -127,6 +134,8 @@ def _normalize(req: SolveRequest):
     d = _as_host(req.d)
     e = _as_host(req.e)
     dtype = req.knobs.get("dtype")
+    if dtype is None and req.knobs.get("precision") == "mixed":
+        dtype = np.float64   # mixed certifies / returns in f64
     if dtype is not None:
         d = d.astype(dtype)
         e = e.astype(dtype)

@@ -47,7 +47,14 @@ def quantize_lanes(x):
     """Stateless int8 quantization over the last axis, one f32 scale per
     leading-dims lane.  Used by the solver's boundary-row halo
     (`dist.sharding.gather_tree_state`), where the transfer is one-shot
-    and there is no next step to carry a residual into."""
+    and there is no next step to carry a residual into.
+
+    The f32 staging here is *intentional*, not a weak-typing leak: the
+    int8 payload carries < 8 bits of mantissa, so an f32 scale already
+    over-represents it for every input dtype (f64 included), and
+    ``dequantize_lanes`` restores the caller's dtype explicitly -- the
+    sharded f32 (mixed-precision) tree round-trips without any silent
+    f64 promotion (pinned by dtype asserts in tests/test_mixed.py)."""
     x32 = x.astype(jnp.float32)
     scale = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / _QMAX
     scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)

@@ -19,9 +19,10 @@ batch is large; the dense path stays fully batched.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import secular as _sec
-from repro.core.secular import DEFAULT_NITER
+from repro.core.secular import DEFAULT_NITER, DEFAULT_NITER_F32
 from repro.kernels.secular_roots import (secular_solve_pallas,
                                          secular_solve_pallas_batch)
 from repro.kernels.boundary_update import boundary_rows_update_pallas
@@ -54,9 +55,24 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def secular_solve(d, z2, rho, kprime, *, niter: int = DEFAULT_NITER,
+def resolve_niter(niter: int | None, dtype) -> int:
+    """Resolve the per-dtype default secular iteration budget.
+
+    ``niter=None`` picks the dtype's budget: f32 trees hit their accuracy
+    floor earlier than f64 (DEFAULT_NITER_F32 vs DEFAULT_NITER -- see
+    ``core.secular``), so the dispatchers below default their iteration
+    count off the pole-array dtype.  An explicit niter always wins.
+    """
+    if niter is not None:
+        return int(niter)
+    return (DEFAULT_NITER_F32 if jnp.dtype(dtype) == jnp.dtype(jnp.float32)
+            else DEFAULT_NITER)
+
+
+def secular_solve(d, z2, rho, kprime, *, niter: int | None = None,
                   chunk: int = 256,
                   dense: bool = False, backend: str | None = None):
+    niter = resolve_niter(niter, d.dtype)
     if dense:
         return _sec.secular_solve(d, z2, rho, kprime, niter=niter,
                                   dense=True)
@@ -81,7 +97,7 @@ def secular_postpass(R, d, z, origin, tau, kprime, rho, *,
                                  use_zhat=use_zhat, chunk=chunk)
 
 
-def secular_solve_batched(d, z2, rho, kprime, *, niter: int = DEFAULT_NITER,
+def secular_solve_batched(d, z2, rho, kprime, *, niter: int | None = None,
                           chunk: int = 256, dense: bool = False,
                           backend: str | None = None):
     """Problem-batched secular solve: d, z2 (B, K); rho, kprime (B,).
@@ -90,6 +106,7 @@ def secular_solve_batched(d, z2, rho, kprime, *, niter: int = DEFAULT_NITER,
     the whole batch); XLA runs the chunked path vmapped over problems.
     Returns (origin (B, K) int32, tau (B, K)).
     """
+    niter = resolve_niter(niter, d.dtype)
     if dense:
         return _sec.secular_solve_batched(d, z2, rho, kprime, niter=niter,
                                           dense=True)
@@ -123,7 +140,7 @@ def secular_postpass_batched(R, d, z, origin, tau, kprime, rho, *,
 
 
 def secular_merge_resident(d, z, R, rho, kprime, *,
-                           niter: int = DEFAULT_NITER,
+                           niter: int | None = None,
                            use_zhat: bool = True,
                            backend: str | None = None):
     """Single-launch resident merge: solve + fused post-pass in ONE dispatch.
@@ -134,6 +151,7 @@ def secular_merge_resident(d, z, R, rho, kprime, *,
     the phases); XLA runs the dense fused composition as one traced
     region.  Callers gate on K <= resident_threshold.
     """
+    niter = resolve_niter(niter, d.dtype)
     if resolve_backend(backend) == "pallas":
         return resident_merge_pallas(d, z, R, rho, kprime, niter=niter,
                                      use_zhat=use_zhat,
@@ -143,7 +161,7 @@ def secular_merge_resident(d, z, R, rho, kprime, *,
 
 
 def secular_merge_resident_batched(d, z, R, rho, kprime, *,
-                                   niter: int = DEFAULT_NITER,
+                                   niter: int | None = None,
                                    use_zhat: bool = True,
                                    backend: str | None = None):
     """Problem-batched resident merge: d, z (B, K); R (B, r, K).
@@ -153,6 +171,7 @@ def secular_merge_resident_batched(d, z, R, rho, kprime, *,
     traced region vmapped over problems on XLA.  Returns
     (origin (B, K) int32, tau (B, K), zhat (B, K), rows (B, r, K)).
     """
+    niter = resolve_niter(niter, d.dtype)
     if resolve_backend(backend) == "pallas":
         return resident_merge_pallas_batch(d, z, R, rho, kprime,
                                            niter=niter, use_zhat=use_zhat,

@@ -156,6 +156,32 @@ def sturm_count_ref(d, e2, shifts, pivmin):
     return jnp.asarray(out)
 
 
+def certify_ref(d, e, lam, tol):
+    """Literal certification oracle for the mixed-precision pipeline.
+
+    An approximate eigenvalue ``lam[b, j]`` is *certified* when the f64
+    Sturm counts bracket the j-th true eigenvalue within ``tol[b]``:
+    ``count(lam - tol) <= j`` and ``count(lam + tol) >= j + 1``, i.e. the
+    interval (lam - tol, lam + tol] provably contains eigenvalue j.  This
+    scalar-loop oracle (built on :func:`sturm_count_ref`) is what the
+    vectorized 2N-lane certify sweep in ``core.bisect`` must agree with
+    exactly -- certification is an integer predicate, so any disagreement
+    is a bug, not roundoff.  d: (B, n); e: (B, n-1); lam: (B, n);
+    tol: (B,) or (B, 1).  Returns (B, n) bool.
+    """
+    d = np.asarray(d, np.float64)
+    e = np.asarray(e, np.float64)
+    lam = np.asarray(lam, np.float64)
+    tol = np.asarray(tol, np.float64).reshape(d.shape[0], 1)
+    e2 = e * e
+    safmin = np.finfo(np.float64).tiny
+    pivmin = safmin * np.maximum(1.0, e2.max(axis=1, initial=0.0))
+    j = np.arange(d.shape[1])[None, :]
+    lo = np.asarray(sturm_count_ref(d, e2, lam - tol, pivmin))
+    hi = np.asarray(sturm_count_ref(d, e2, lam + tol, pivmin))
+    return jnp.asarray((lo <= j) & (hi >= j + 1))
+
+
 def zhat_reconstruct_ref(d, z, origin, tau, kprime, rho):
     """Dense pairwise log-product oracle."""
     K = d.shape[0]

@@ -76,7 +76,13 @@ def _host_pad(d: np.ndarray, e: np.ndarray, N: int):
         return d, e
     emax = (np.max(np.abs(e), axis=1) if e.shape[1]
             else np.zeros((B,), d.dtype))
-    sentinel = np.max(np.abs(d), axis=1) + 2.0 * emax + 1.0
+    # dtype-typed constants: NumPy 1.x value-based promotion silently
+    # lifts `2.0 * f32_array` to f64, which would stage f32 traffic
+    # through an f64 sentinel row (bitwise identical for f64 batches,
+    # a silent promotion for f32/mixed ones).
+    two = d.dtype.type(2.0)
+    one = d.dtype.type(1.0)
+    sentinel = np.max(np.abs(d), axis=1) + two * emax + one
     d_pad = np.concatenate(
         [d, np.broadcast_to(sentinel[:, None], (B, N - n)).astype(d.dtype)],
         axis=1)

@@ -30,6 +30,22 @@ from repro.core import (FAMILIES, METHODS, eigvalsh_tridiagonal,
 EPS = np.finfo(np.float64).eps
 CONFORMANCE_TOL_EPS = 64.0
 
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_executables():
+    # The conformance sweep (methods x families x sizes, now including
+    # the precision="mixed" column's f32 tree + certify/refine
+    # executables) is the biggest single compile load in the suite.
+    # XLA:CPU holds every executable's memory mappings until process
+    # exit and vm.max_map_count is a process-wide kernel budget, so
+    # release the plan cache and jit caches when the module finishes.
+    yield
+    import jax
+
+    from repro.core.plan import clear_plan_cache
+    clear_plan_cache()
+    jax.clear_caches()
+
 SIZES = (1, 2, 3, 17, 128, 257)
 
 # Per-method solver kwargs: the D&C methods take the tree knobs (small
@@ -84,6 +100,22 @@ def test_range_slice_matches_scipy(family, n):
                                atol=conformance_tol(d, e))
 
 
+@pytest.mark.mixed
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("family", FAMILIES)
+def test_mixed_matches_scipy(family, n):
+    """precision="mixed" joins the conformance matrix: the f32 tree +
+    Sturm-certified f64 refinement must meet the same external 64-eps
+    contract as every native method, for every family x size."""
+    d, e = make_family(family, n)
+    got = np.asarray(eigvalsh_tridiagonal(d, e, precision="mixed", leaf=8))
+    assert got.dtype == np.float64        # mixed returns f64 eigenvalues
+    ref = _scipy_ref(d, e)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(got, ref, rtol=0, atol=conformance_tol(d, e))
+    assert np.all(np.diff(got) >= 0.0)    # refinement sorts exactly
+
+
 def _toeplitz_closed_form(n, d0=2.0, e0=0.25):
     j = np.arange(1, n + 1, dtype=np.float64)
     return np.sort(d0 + 2.0 * abs(e0) * np.cos(np.pi * j / (n + 1)))
@@ -99,6 +131,18 @@ def test_toeplitz_closed_form(method, n):
                                           **_METHOD_KW[method]))
     want = _toeplitz_closed_form(n)
     np.testing.assert_allclose(got, want, rtol=0,
+                               atol=conformance_tol(d, e))
+
+
+@pytest.mark.mixed
+@pytest.mark.parametrize("n", SIZES)
+def test_toeplitz_closed_form_mixed(n):
+    """Mixed precision against the exact analytic oracle -- the cosine
+    spectrum is dense with near-uniform gaps, a worst case for an f32
+    tree's cluster resolution."""
+    d, e = make_family("toeplitz", n)
+    got = np.asarray(eigvalsh_tridiagonal(d, e, precision="mixed", leaf=8))
+    np.testing.assert_allclose(got, _toeplitz_closed_form(n), rtol=0,
                                atol=conformance_tol(d, e))
 
 

@@ -1,0 +1,316 @@
+"""Mixed-precision pipeline: f32 D&C tree + Sturm-certified f64 refinement.
+
+Four contracts pinned here:
+
+  * soundness -- certification is an integer predicate on f64 Sturm
+    counts: every NON-polished eigenvalue already meets the tolerance,
+    and every returned eigenvalue (polished or not) is certified by an
+    independent count check.  The vectorized certify sweep must agree
+    exactly with the scalar reference oracle (``kernels.ref.certify_ref``).
+  * dtype hygiene -- the f32 tree must stay f32 end to end (no silent
+    weak-typing promotions in host staging, halo compression, or the
+    pivot floor), while the mixed OUTPUT is float64.
+  * isolation -- the default f64 path stays bit-identical with mixed
+    traffic interleaved (precision/refine_tol split the route key, so a
+    mixed solve can never retrace or perturb a native executable).
+  * observability -- the refinement gauge mirrors the deflation gauge:
+    per-solve (targets, polished, iterations, rounds) land in
+    ``measure(refinement=True)`` windows, and mixed routes
+    prewarm/coalesce like any other.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FAMILIES, eigvalsh_tridiagonal, make_family
+from repro.core import bisect as bis
+from repro.core import plan as plan_mod
+from repro.core.br_dc import (SOLVE_COUNTER, _pad_problem,
+                              eigvalsh_tridiagonal_batch,
+                              eigvalsh_tridiagonal_br)
+from repro.core.bisect import (DEFAULT_REFINE_TOL, _pivot_floor,
+                               refine_clusters, sturm_count_xla)
+from repro.dist.compression import dequantize_lanes, quantize_lanes
+from repro.kernels.ref import certify_ref
+from repro.serve.engine import _host_pad
+
+EPS = np.finfo(np.float64).eps
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_executables():
+    # This module compiles many one-off executables (f32 tree plans,
+    # certify sweeps, pow2-bucketed refine launches, serve/prewarm
+    # traffic).  XLA:CPU keeps every loaded executable's memory
+    # mappings for the life of the process, and the kernel's
+    # vm.max_map_count budget is shared with all later test modules --
+    # drop the plan cache and jit caches on the way out so the suite's
+    # mapping high-water stays near its pre-mixed level.
+    yield
+    plan_mod.clear_plan_cache()
+    jax.clear_caches()
+
+pytestmark = pytest.mark.mixed
+
+
+def _f32_tree_estimates(d, e, leaf=8):
+    """The mixed pipeline's first stage in isolation: an f32 tree solve
+    of the f64 problem, upcast -- exactly what refine_clusters receives."""
+    res = eigvalsh_tridiagonal_br(np.asarray(d, np.float32),
+                                  np.asarray(e, np.float32), leaf=leaf)
+    return np.asarray(res.eigenvalues, np.float64)[None, :]
+
+
+def _count_certified(d, e, lam, tol):
+    """Independent soundness check: (B, n) bool, True where f64 Sturm
+    counts prove |lam[b, j] - true lam_j| <= tol[b]."""
+    return np.asarray(certify_ref(d, e, lam, tol))
+
+
+# ---------------------------------------------------------------- soundness
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_refinement_soundness(family):
+    """Every non-polished lane is returned bit-identical AND certified:
+    the freeze heuristics inside the polish loop cannot produce an
+    uncertified eigenvalue, because only certification (sound by
+    construction) decides what refine_clusters leaves alone."""
+    n = 257
+    d, e = make_family(family, n)
+    lam0 = _f32_tree_estimates(d, e)
+    lam, info = refine_clusters(d[None, :], e[None, :], lam0, sort=False)
+    lam = np.asarray(lam)
+
+    untouched = ~info["polished_mask"]
+    assert np.array_equal(lam[untouched], lam0[untouched])
+
+    tol = DEFAULT_REFINE_TOL * EPS * max(
+        1.0, np.abs(d).max() + 2.0 * np.abs(e).max())
+    cert = _count_certified(d[None, :], e[None, :], lam, np.array([tol]))
+    assert cert.all(), f"{(~cert).sum()} uncertified lanes"
+    # ... including the ones the polish never touched: stage-1 output
+    # already met tolerance there, which is the soundness property.
+    cert0 = _count_certified(d[None, :], e[None, :], lam0, np.array([tol]))
+    assert cert0[untouched].all()
+
+
+def test_certify_sweep_matches_scalar_oracle():
+    """The 2N-lane vectorized certify sweep agrees exactly with the
+    scalar-loop reference -- certification is integer-valued, so any
+    mismatch is a vectorization bug, not roundoff."""
+    rng = np.random.default_rng(7)
+    B, n = 3, 64
+    d = rng.standard_normal((B, n))
+    e = rng.standard_normal((B, n - 1))
+    lam = np.sort(np.stack([
+        np.linalg.eigvalsh(np.diag(d[b]) + np.diag(e[b], 1)
+                           + np.diag(e[b], -1)) for b in range(B)]), axis=1)
+    # Perturb some lanes past tolerance so both outcomes appear.
+    lam_pert = lam.copy()
+    lam_pert[:, ::5] += 1e-7
+    cert, _, _, tol = bis._certify_executor(
+        jnp.asarray(d), jnp.asarray(e * e), jnp.asarray(lam_pert),
+        jnp.full((B,), n, jnp.int32), jnp.asarray(DEFAULT_REFINE_TOL))
+    want = _count_certified(d, e, lam_pert, np.asarray(tol))
+    assert np.array_equal(np.asarray(cert), want)
+    assert not np.asarray(cert).all()      # the perturbation was detected
+    assert np.asarray(cert).any()
+
+
+def test_certified_brackets_enclose():
+    """The tightest-bracket extraction stays an enclosure: every true
+    eigenvalue lies in its lane's [lo, hi]."""
+    rng = np.random.default_rng(11)
+    n = 48
+    d = rng.standard_normal((1, n))
+    e = rng.standard_normal((1, n - 1))
+    truth = np.linalg.eigvalsh(np.diag(d[0]) + np.diag(e[0], 1)
+                               + np.diag(e[0], -1))
+    lam = truth[None, :] + rng.uniform(-1e-8, 1e-8, (1, n))
+    _, lo, hi, _ = bis._certify_executor(
+        jnp.asarray(d), jnp.asarray(e * e), jnp.asarray(lam),
+        jnp.full((1,), n, jnp.int32), jnp.asarray(DEFAULT_REFINE_TOL))
+    lo, hi = np.asarray(lo)[0], np.asarray(hi)[0]
+    assert (lo <= truth).all() and (truth <= hi).all()
+
+
+def test_mixed_padded_and_batched_soundness():
+    """End-to-end mixed solves certify: padded sizes (sentinel lanes in
+    the tree), batches, and boundary-row output all go through the same
+    refine stage.  Post-sort lanes may swap within tolerance, so the
+    end-to-end check allows 2 * tol."""
+    rng = np.random.default_rng(3)
+    B, n = 4, 100                      # pads to 128 at leaf=8
+    d = rng.standard_normal((B, n))
+    e = rng.standard_normal((B, n - 1))
+    res = eigvalsh_tridiagonal_batch(d, e, leaf=8, precision="mixed",
+                                     return_boundary=True)
+    lam = np.asarray(res.eigenvalues)
+    assert lam.shape == (B, n) and lam.dtype == np.float64
+    assert res.blo.dtype == jnp.float64 and res.bhi.dtype == jnp.float64
+    assert (np.diff(lam, axis=1) >= 0.0).all()
+    tol = DEFAULT_REFINE_TOL * EPS * np.maximum(
+        1.0, np.abs(d).max(axis=1) + 2.0 * np.abs(e).max(axis=1))
+    assert _count_certified(d, e, lam, 2.0 * tol).all()
+
+
+# ------------------------------------------------------------ dtype hygiene
+
+
+def test_f32_native_solve_stays_f32():
+    d, e = make_family("normal", 130)
+    res = eigvalsh_tridiagonal_br(np.asarray(d, np.float32),
+                                  np.asarray(e, np.float32), leaf=8)
+    assert res.eigenvalues.dtype == jnp.float32
+
+
+def test_host_pad_no_promotion_and_bitwise_match():
+    """serve's numpy staging must mirror the device padding bitwise AND
+    keep f32 batches f32 (NumPy 1.x value-based promotion would silently
+    lift `2.0 * f32` to f64 without the typed constants)."""
+    rng = np.random.default_rng(5)
+    for dt in (np.float32, np.float64):
+        d = rng.standard_normal((3, 20)).astype(dt)
+        e = rng.standard_normal((3, 19)).astype(dt)
+        d_host, e_host = _host_pad(d, e, 32)
+        assert d_host.dtype == dt and e_host.dtype == dt
+        d_dev, e_dev, N, _ = _pad_problem(jnp.asarray(d), jnp.asarray(e), 32)
+        assert np.array_equal(d_host, np.asarray(d_dev))
+        assert np.array_equal(e_host, np.asarray(e_dev)[:, :N - 1])
+
+
+def test_halo_compression_roundtrip_dtype():
+    x = jnp.asarray(np.random.default_rng(9).standard_normal((2, 3, 16)),
+                    jnp.float32)
+    q, scale = quantize_lanes(x)
+    assert q.dtype == jnp.int8 and scale.dtype == jnp.float32
+    out = dequantize_lanes(q, scale, x.dtype)
+    assert out.dtype == jnp.float32
+
+
+def test_pivot_floor_dtype():
+    e2 = jnp.asarray([[1.0, 4.0]], jnp.float32)
+    assert _pivot_floor(e2, jnp.float32).dtype == jnp.float32
+    assert _pivot_floor(e2.astype(jnp.float64),
+                        jnp.float64).dtype == jnp.float64
+
+
+def test_refine_requires_x64_inputs_upcast():
+    """refine_clusters always certifies in f64 regardless of input dtype."""
+    d, e = make_family("uniform", 33)
+    lam0 = _f32_tree_estimates(d, e)
+    lam, _ = refine_clusters(np.asarray(d, np.float32)[None, :],
+                             np.asarray(e, np.float32)[None, :],
+                             np.asarray(lam0, np.float32))
+    assert lam.dtype == jnp.float64
+
+
+# ----------------------------------------------------------- f64 isolation
+
+
+def test_native_f64_bit_identical_around_mixed_traffic():
+    """Interleaving mixed solves must not perturb the native f64 answer
+    by a single bit -- precision splits the route key, so native traffic
+    keeps its own executable."""
+    d, e = make_family("clustered", 257)
+    before = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8))
+    eigvalsh_tridiagonal(d, e, leaf=8, precision="mixed")
+    after = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8))
+    assert np.array_equal(before, after)
+
+
+# ------------------------------------------------------- routing / serving
+
+
+def test_route_key_split_and_coalesce():
+    native = plan_mod.resolve_solve_route(257, leaf=8)
+    mixed1 = plan_mod.resolve_solve_route(257, leaf=8, precision="mixed")
+    mixed2 = plan_mod.resolve_solve_route(257, leaf=8, precision="mixed")
+    assert mixed1 == mixed2                       # coalesces with itself
+    assert mixed1 != native                       # never with native
+    assert native.precision == "native" and native.refine_tol == 0.0
+    assert mixed1.precision == "mixed"
+    assert mixed1.refine_tol == DEFAULT_REFINE_TOL
+    assert mixed1.dtype == "float64"              # OUTPUT dtype stays f64
+    # An explicit tolerance is its own route (coalescing invariant: equal
+    # keys <=> shared executable + shared refine stage).
+    loose = plan_mod.resolve_solve_route(257, leaf=8, precision="mixed",
+                                         refine_tol=64.0)
+    assert loose != mixed1 and loose.refine_tol == 64.0
+
+
+def test_route_validation_errors():
+    with pytest.raises(ValueError, match="refine_tol only applies"):
+        plan_mod.resolve_solve_route(64, refine_tol=16.0)
+    with pytest.raises(ValueError, match="refine_tol must be positive"):
+        plan_mod.resolve_solve_route(64, precision="mixed", refine_tol=0.0)
+    with pytest.raises(ValueError, match="float64 or None"):
+        plan_mod.resolve_solve_route(64, precision="mixed",
+                                     dtype=jnp.float32)
+    with pytest.raises(ValueError, match="precision must be"):
+        plan_mod.resolve_solve_route(64, precision="half")
+
+
+def test_prewarm_mixed_compiles_both_executors():
+    """A mixed prewarm spec compiles the f32 tree AND the certify sweep:
+    the follow-up same-shape mixed solve performs zero new traces."""
+    plan_mod.clear_plan_cache()
+    report = plan_mod.prewarm([{"kind": "solve", "n": 200, "batch": 4,
+                                "leaf": 8, "precision": "mixed"}])
+    assert report["plans"] == 1
+    stats = plan_mod.plan_cache_stats()
+    assert stats["refine_executor_traces"] >= 1   # certify sweep compiled
+    t0 = plan_mod.EXECUTOR_TRACES.count
+    rng = np.random.default_rng(1)
+    eigvalsh_tridiagonal_batch(rng.standard_normal((4, 200)),
+                               rng.standard_normal((4, 199)),
+                               leaf=8, precision="mixed")
+    assert plan_mod.EXECUTOR_TRACES.count == t0   # tree executor reused
+
+
+def test_serve_mixed_request_roundtrip():
+    """Mixed rides the service like any route: the served answer equals
+    the sync answer bitwise (same plan, same refine stage)."""
+    from repro.serve import EigensolverClient
+    d, e = make_family("normal", 64)
+    want = np.asarray(eigvalsh_tridiagonal(d, e, leaf=8, precision="mixed"))
+    with EigensolverClient(max_batch=4, max_wait_us=1000) as client:
+        got = np.asarray(client.solve(d, e, leaf=8, precision="mixed"))
+    assert np.array_equal(got, want)
+
+
+# ----------------------------------------------------------- observability
+
+
+def test_refinement_gauge():
+    d, e = make_family("clustered", 257)
+    with SOLVE_COUNTER.measure(refinement=True) as window:
+        eigvalsh_tridiagonal(d, e, leaf=8, precision="mixed")
+    stats = window.refinement_stats
+    assert stats["solves"] == 1
+    assert stats["targets"] == 257
+    assert 0 <= stats["polished"] <= stats["targets"]
+    assert stats["polish_fraction"] == stats["polished"] / stats["targets"]
+    assert stats["max_rounds"] <= bis.DEFAULT_REFINE_ROUNDS
+    # Outside a refinement window the gauge is off (steady state records
+    # nothing), matching the deflation gauge's gating contract.
+    with SOLVE_COUNTER.measure() as cold:
+        eigvalsh_tridiagonal(d, e, leaf=8, precision="mixed")
+    assert cold.refinement_stats["solves"] == 0
+
+
+def test_refinement_counts_misses_not_n():
+    """The pipeline's cost model: polish work is proportional to the miss
+    set.  A well-separated spectrum certifies (almost) everywhere on
+    round one; polished lanes stay a strict subset of targets."""
+    d, e = make_family("wilkinson", 257)      # close pairs -> some misses
+    lam0 = _f32_tree_estimates(d, e)
+    _, info = refine_clusters(d[None, :], e[None, :], lam0)
+    assert info["targets"] == 257
+    assert info["polished"] < 257             # never polish-everything
+    if info["polished"] == 0:
+        assert info["iterations"] == 0
