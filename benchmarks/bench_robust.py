@@ -1,0 +1,110 @@
+"""Robustness overhead: what do the guard and the certificate cost?
+
+The graceful-degradation machinery is only shippable if its steady-state
+price is negligible -- a guard that taxes every healthy solve buys
+nothing.  Rows (default n=4096, full spectrum):
+
+  * ``robust_plain_n{..}``     -- the unguarded-equivalent baseline: the
+    request core with certify off, scale 1 (the guard's zero-copy pass
+    through; bit-identical to the seed behavior by construction);
+  * ``robust_guard_n{..}``     -- same solve, measured against plain with
+    interleaved timing: prices the front-door validation + equilibration
+    screen alone (acceptance: <= 10% overhead);
+  * ``robust_certify_n{..}``   -- certify=True: adds the one batched
+    Sturm sweep (acceptance: <= 10% overhead -- the sweep is O(n log n)
+    against the tree's O(n^2)-ish constant);
+  * ``robust_serve_certified`` -- certified coalesced flush throughput
+    vs uncertified through the service (acceptance: within 15%).
+
+Rows feed BENCH_robust.json via
+``python -m benchmarks.run --only robust --json BENCH_robust.json``.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from benchmarks.common import time_call, time_pair
+from repro.core import SolveRequest, clear_plan_cache, execute_request
+from repro.core import make_family
+
+
+def _serve_throughput(certify: bool, problems, reqs_per_thread=4,
+                      threads=4):
+    from repro.serve import EigensolverClient
+    import time as _time
+    with EigensolverClient(max_batch=len(problems)) as client:
+        futs = [None] * (threads * reqs_per_thread)
+
+        def worker(t):
+            for i in range(reqs_per_thread):
+                d, e = problems[(t * reqs_per_thread + i) % len(problems)]
+                futs[t * reqs_per_thread + i] = client.solve_async(
+                    d, e, certify=certify)
+
+        def drive():
+            ts = [threading.Thread(target=worker, args=(t,))
+                  for t in range(threads)]
+            t0 = _time.perf_counter()
+            for th in ts:
+                th.start()
+            for th in ts:
+                th.join()
+            for f in futs:
+                f.result()
+            return _time.perf_counter() - t0
+
+        drive()   # warm-up pass: compiles the coalesced batch buckets
+        wall = min(drive(), drive())
+    return wall / len(futs)
+
+
+def run(report, quick: bool = False, n: int | None = None):
+    if n is None:
+        n = 1024 if quick else 4096
+    d, e = make_family("normal", n)
+    iters = 3 if quick else 5
+
+    clear_plan_cache()
+    plain_req = SolveRequest(d=d, e=e)
+    cert_req = SolveRequest(d=d, e=e, certify=True)
+
+    # Warm both executables (the certify sweep is its own jit; the tree
+    # executable is shared -- pinned by tests/test_guard.py).
+    execute_request(plain_req)
+    execute_request(cert_req)
+
+    t_plain, t_cert = time_pair(
+        lambda: execute_request(plain_req).eigenvalues,
+        lambda: execute_request(cert_req).eigenvalues, iters=iters)
+    report(f"robust_plain_n{n}", t_plain, "request core, certify off")
+    cert_over = (t_cert / t_plain - 1.0) * 100.0
+    report(f"robust_certify_n{n}", t_cert,
+           f"certified solve, overhead={cert_over:+.1f}% "
+           f"(bar <= 10%)")
+
+    # Guard-alone price: the validation + equilibration screen runs
+    # host-side before every routed solve; price it directly (numpy
+    # reductions over (n,) + (n-1,)) relative to the solve.
+    from repro.core import guard as _guard
+    t_screen = time_call(
+        lambda: _guard.equilibrate(*_guard.validate_problem(d, e)),
+        warmup=1, iters=max(iters, 10))
+    report(f"robust_guard_n{n}", t_plain + t_screen,
+           f"guarded solve, overhead={t_screen / t_plain * 100.0:+.2f}% "
+           f"(bar <= 10%)")
+
+    # Certified serving throughput vs uncertified.
+    count = 4 if quick else 8
+    ns = n // 4
+    rng = np.random.default_rng(0)
+    problems = [(rng.normal(size=ns), rng.normal(size=ns - 1))
+                for _ in range(count)]
+    per_req_plain = _serve_throughput(False, problems)
+    per_req_cert = _serve_throughput(True, problems)
+    gap = (per_req_cert / per_req_plain - 1.0) * 100.0
+    report("robust_serve_certified", per_req_cert,
+           f"certified flush vs plain {per_req_plain * 1e6:.0f}us, "
+           f"gap={gap:+.1f}% (bar <= 15%)")

@@ -89,9 +89,9 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_accuracy, bench_batched, bench_dist,
                             bench_fused, bench_kernels, bench_merge,
-                            bench_mixed, bench_partial, bench_scaling,
-                            bench_serve, bench_vs_lazy, bench_vs_sterf,
-                            bench_workspace, roofline)
+                            bench_mixed, bench_partial, bench_robust,
+                            bench_scaling, bench_serve, bench_vs_lazy,
+                            bench_vs_sterf, bench_workspace, roofline)
 
     if args.prewarm:
         from repro.core.plan import prewarm
@@ -136,6 +136,7 @@ def main(argv=None) -> None:
         "partial": lambda: bench_partial.run(report, quick=args.quick),
         "mixed": lambda: bench_mixed.run(report, quick=args.quick),
         "serve": lambda: bench_serve.run(report, quick=args.quick),
+        "robust": lambda: bench_robust.run(report, quick=args.quick),
         "dist": lambda: bench_dist.run(report, quick=args.quick,
                                        max_shards=args.mesh),
         "roofline": lambda: roofline.run(report),

@@ -21,6 +21,13 @@ The lifecycle every request takes:
 
 ``--smoke`` is the CI gate: exits non-zero unless every request
 succeeded and same-bucket traffic actually coalesced (factor > 1).
+
+``--chaos`` arms a scripted deterministic fault schedule
+(``repro.runtime.faults``) before driving the same workload: a transient
+launch fault (consumes one retry), NaN-poisoned device outputs (walks
+the degradation ladder), and a staging delay (trips the straggler
+clock).  The gate then also requires ZERO hung futures -- every future
+resolves despite the storm -- and at least one recorded degradation.
 """
 
 import argparse
@@ -40,6 +47,9 @@ def main(argv=None):
     ap.add_argument("--max-wait-us", type=int, default=3000)
     ap.add_argument("--smoke", action="store_true",
                     help="assert zero errors and coalesce factor > 1")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a scripted fault schedule; assert zero "
+                         "hung futures and recorded degradations")
     args = ap.parse_args(argv)
 
     import jax
@@ -65,6 +75,22 @@ def main(argv=None):
                                max_wait_us=args.max_wait_us,
                                queue_depth=4 * args.max_batch,
                                prewarm=spec)
+
+    if args.chaos:
+        # Armed AFTER prewarm so the schedule's hit counts line up with
+        # request traffic, not compile-time dry runs.  Count-driven and
+        # seeded: the same run injects the same faults every time.
+        from repro.runtime import FaultSpec, configure_faults
+        configure_faults([
+            FaultSpec(site="serve.launch", kind="error", times=(0,),
+                      error="transient"),
+            FaultSpec(site="plan.output", kind="nan", times=(1, 4),
+                      lane=0, width=1),
+            FaultSpec(site="serve.stage", kind="delay", times=(3,),
+                      delay_s=0.05),
+        ])
+        print("[serve] chaos schedule armed: serve.launch error, "
+              "plan.output NaN x2, serve.stage delay")
 
     futs, lock = [], threading.Lock()
 
@@ -95,10 +121,14 @@ def main(argv=None):
         t.start()
     for t in threads:
         t.join()
-    errors = 0
+    import concurrent.futures as _cf
+    errors = hung = 0
     for f in futs:
         try:
             f.result(timeout=600)
+        except _cf.TimeoutError:              # the one unforgivable sin
+            hung += 1
+            print("[serve] request HUNG (future never resolved)")
         except Exception as exc:  # noqa: BLE001 - demo counts, then reports
             errors += 1
             print(f"[serve] request failed: {exc!r}")
@@ -106,6 +136,10 @@ def main(argv=None):
 
     snap = client.metrics()
     client.close()
+    if args.chaos:
+        from repro.runtime import fault_stats, reset_faults
+        chaos_stats = fault_stats()
+        reset_faults()
 
     print(f"\n[serve] {len(futs)} requests in {dt:.2f}s "
           f"({len(futs) / dt:.0f} req/s), {errors} errors")
@@ -127,10 +161,23 @@ def main(argv=None):
           f"{cache['executor_traces'] + cache['range_executor_traces']} "
           f"traces, {(cache['state_bytes'] + cache['range_state_bytes']) / 1e6:.2f} MB state budget")
 
+    if args.chaos:
+        degr = sum(b.get("degradations", 0)
+                   for b in snap["buckets"].values())
+        retries = sum(b.get("retries", 0)
+                      for b in snap["buckets"].values())
+        print(f"[serve] chaos: fired={chaos_stats['fired']}, "
+              f"degradations={degr}, retries={retries}, hung={hung}")
+
     if args.smoke:
-        ok = errors == 0 and overall > 1.0
-        print(f"[serve] smoke: {'PASS' if ok else 'FAIL'} "
-              f"(errors={errors}, coalesce={overall:.2f})")
+        ok = errors == 0 and hung == 0 and overall > 1.0
+        if args.chaos:
+            ok = ok and degr >= 1
+            print(f"[serve] chaos smoke: {'PASS' if ok else 'FAIL'} "
+                  f"(errors={errors}, hung={hung}, degradations={degr})")
+        else:
+            print(f"[serve] smoke: {'PASS' if ok else 'FAIL'} "
+                  f"(errors={errors}, coalesce={overall:.2f})")
         if not ok:
             sys.exit(1)
 

@@ -6,7 +6,11 @@ against, all sharing one merge core so exact-arithmetic equivalence
 """
 
 from repro.core.api import eigvalsh_tridiagonal, METHODS
-from repro.core.bisect import eigvalsh_tridiagonal_range, sturm_count
+from repro.core.bisect import (SpectrumCertificate, certify_spectrum,
+                               eigvalsh_tridiagonal_range, sturm_count)
+from repro.core.guard import (CertificationError, DeadlineExceeded,
+                              InvalidInputError, equilibrate,
+                              validate_problem)
 from repro.core.request import (
     KINDS,
     RoutedRequest,
@@ -62,12 +66,13 @@ from repro.core.tridiag import (
 )
 
 __all__ = [
-    "BRBatchResult", "BRResult", "FAMILIES", "KINDS", "METHODS",
+    "BRBatchResult", "BRResult", "CertificationError", "DeadlineExceeded",
+    "FAMILIES", "InvalidInputError", "KINDS", "METHODS",
     "RangePlan", "RoutedRequest",
     "SOLVE_COUNTER",
-    "SolvePlan", "SolveRequest", "SolveResult",
-    "boundary_rows_update", "clear_plan_cache",
-    "dense_from_tridiag",
+    "SolvePlan", "SolveRequest", "SolveResult", "SpectrumCertificate",
+    "boundary_rows_update", "certify_spectrum", "clear_plan_cache",
+    "dense_from_tridiag", "equilibrate",
     "eig_tridiagonal_full_dc", "eigvalsh_tridiagonal",
     "eigvalsh_tridiagonal_batch", "eigvalsh_tridiagonal_bisect",
     "eigvalsh_tridiagonal_br",
@@ -79,7 +84,7 @@ __all__ = [
     "prewarm", "range_plan_for_route", "resolve_range_route",
     "resolve_solve_route", "route_request",
     "secular_eigenvalues",
-    "secular_solve", "sturm_count", "workspace_model",
+    "secular_solve", "sturm_count", "validate_problem", "workspace_model",
     "workspace_model_bisect", "workspace_model_full",
     "workspace_model_lazy", "workspace_model_sterf", "zhat_reconstruct",
 ]

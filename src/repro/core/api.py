@@ -68,10 +68,22 @@ def eigvalsh_tridiagonal(d, e, method: str = "br", **kw):
     tolerance in eps_f64 * ||T|| units) -- the big-n speed knob when
     LAPACK-grade f64 output is still required.  See
     :func:`repro.core.br_dc.eigvalsh_tridiagonal_br` for details.
+
+    Every method accepts ``certify=True``: one extra batched Sturm-count
+    sweep verifies each returned eigenvalue against the original (d, e)
+    to ``refine_tol * eps * max(1, ||T||)`` and escalates misses or
+    non-finite outputs down the graceful-degradation ladder
+    (mixed -> native D&C -> per-lane Sturm bisection) instead of
+    returning them.  Inputs are validated at the front door
+    (``guard.InvalidInputError`` names the poisoned lane/index) and
+    pathological scalings are equilibrated by an exact power of two --
+    see the README "Robustness" section.
     """
     d = jnp.asarray(d)
     kind = "batch" if d.ndim == 2 else "full"
     req = SolveRequest(d=d, e=e, kind=kind, method=method,
                        return_boundary=bool(kw.pop("return_boundary", False)),
+                       certify=bool(kw.pop("certify", False)),
+                       deadline_ms=kw.pop("deadline_ms", None),
                        knobs=kw)
     return execute_request(req).eigenvalues

@@ -1,0 +1,224 @@
+"""Guarded front door: input validation, overflow-safe equilibration,
+and the robustness error taxonomy.
+
+A production eigensolver service has to survive the inputs the
+correctness proofs assume away: NaN/Inf poisoned problems, pathological
+scalings where ``e**2`` (the Sturm recurrence's working quantity) or
+``d**2 + e**2`` overflows or underflows, and malformed shapes submitted
+by remote callers.  This module is the single place those concerns live:
+
+  * :class:`InvalidInputError` -- structured rejection naming the
+    offending field, lane, and index, raised HOST-SIDE at route time so
+    the serving scheduler fails a poisoned request's own future before it
+    joins (and could poison) a coalesced flush.
+  * :func:`validate_problem` -- shape / dtype / finiteness checks shared
+    by ``route_request`` and the public utilities (``sturm_count``,
+    ``certify_spectrum``).
+  * :func:`equilibrate` -- LAPACK-style norm scaling (DSTEDC's ``orgnrm``
+    guard): when the problem's Gershgorin scale leaves the range where
+    squared off-diagonals are representable, (d, e) are scaled by an
+    exact power of two and eigenvalues are inverse-scaled on output.
+    Scaling by powers of two is exact in binary floating point, so the
+    scaled solve's Sturm counts (and therefore its certification) are
+    mathematically those of the original problem, and ``scale == 1``
+    traffic is bit-identical to an unguarded solve by construction.
+  * The degradation-ladder error classes and process-wide counters
+    (:data:`DEGRADATIONS`, :data:`DEADLINES`) the serve/metrics stack
+    reports and ``clear_plan_cache`` resets.
+
+The module deliberately imports no solver code -- it must be importable
+from ``request``/``plan``/``serve`` without cycles.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.instrument import SolveCounter
+
+
+class InvalidInputError(ValueError):
+    """A malformed or poisoned problem, rejected at the front door.
+
+    Subclasses ValueError so existing ``pytest.raises(ValueError)`` /
+    caller ``except ValueError`` contracts keep holding; carries
+    structured fields so a service operator can see WHICH lane of WHICH
+    submitted batch was poisoned without parsing the message.
+    """
+
+    def __init__(self, message: str, *, field: str | None = None,
+                 lane: int | None = None, index: int | None = None):
+        super().__init__(message)
+        self.field = field
+        self.lane = lane
+        self.index = index
+
+
+class DeadlineExceeded(TimeoutError):
+    """A request outlived its ``deadline_ms`` budget.
+
+    Raised (onto the request's future) by the serving scheduler at
+    flush-assembly time and by the engine post-launch -- an expired
+    request must not hold a flush slot or force a caller to wait for an
+    answer it can no longer use.
+    """
+
+
+class CertificationError(RuntimeError):
+    """The graceful-degradation ladder was exhausted: even the final
+    Sturm-bisection rung could not produce a certified, finite answer
+    (or a boundary-row contract could not be met after re-solve)."""
+
+
+# Process-wide robustness counters, reset by ``plan.clear_plan_cache``
+# (chaos tests must not leak escalation counts into neighboring tests --
+# the same isolation contract EXECUTOR_TRACES got in PR 5).
+DEGRADATIONS = SolveCounter("degradations")
+DEADLINES = SolveCounter("deadline_expired")
+
+
+def _is_jax_array(x) -> bool:
+    # Avoid importing jax for plain-numpy traffic paths.
+    import sys
+    jax = sys.modules.get("jax")
+    return jax is not None and isinstance(x, jax.Array)
+
+
+def _first_nonfinite(arr: np.ndarray):
+    """(lane, index) of the first non-finite entry (lane None for 1-D)."""
+    bad = ~np.isfinite(arr)
+    flat = int(np.argmax(bad))
+    if arr.ndim == 1:
+        return None, flat
+    return flat // arr.shape[1], flat % arr.shape[1]
+
+
+def _check_finite(arr, name: str) -> None:
+    """Host-side finiteness check; localizes the offending entry only on
+    failure (the pass path is one reduction, no per-element work)."""
+    host = np.asarray(arr)
+    if np.isfinite(host).all():
+        return
+    lane, index = _first_nonfinite(host)
+    kind = "NaN" if np.isnan(host.reshape(-1)[
+        (0 if lane is None else lane * host.shape[1]) + index]) else "Inf"
+    where = (f"index {index}" if lane is None
+             else f"lane {lane}, index {index}")
+    raise InvalidInputError(
+        f"{name} contains {kind} at {where}; poisoned problems are "
+        f"rejected at the front door (fix the input or filter the lane)",
+        field=name, lane=lane, index=index)
+
+
+def validate_problem(d, e, *, name: str = "problem",
+                     check_finite: bool = True):
+    """Validate a tridiagonal (d, e) pair: shapes, dtype, finiteness.
+
+    Accepts 1-D ``(n,)/(n-1,)`` or stacked ``(B, n)/(B, n-1)`` input of
+    any array library (numpy is used host-side; jax arrays are pulled
+    once).  Raises :class:`InvalidInputError` naming the offending
+    field/lane/index.  Returns ``(d, e)`` as given (no copies, no dtype
+    changes) so callers can keep zero-copy submission semantics.
+    """
+    d_shape = np.shape(d)
+    e_shape = np.shape(e)
+    if len(d_shape) not in (1, 2):
+        raise InvalidInputError(
+            f"{name}: d must be 1-D (n,) or stacked 2-D (B, n), got "
+            f"shape {d_shape}", field="d")
+    if d_shape[-1] == 0 or (len(d_shape) == 2 and d_shape[0] == 0):
+        raise InvalidInputError(
+            f"{name}: d must be non-empty, got shape {d_shape}", field="d")
+    if len(e_shape) != len(d_shape):
+        raise InvalidInputError(
+            f"{name}: e must have d's rank; got d {d_shape} vs e "
+            f"{e_shape}", field="e")
+    n = d_shape[-1]
+    if e_shape[-1] != max(n - 1, 0) or (len(d_shape) == 2
+                                        and e_shape[0] != d_shape[0]):
+        raise InvalidInputError(
+            f"{name}: e must have shape {d_shape[:-1] + (max(n - 1, 0),)} "
+            f"(n-1 off-diagonals per lane of d {d_shape}), got {e_shape}",
+            field="e")
+    for arr, field in ((d, "d"), (e, "e")):
+        dt = np.asarray(arr).dtype if not _is_jax_array(arr) else arr.dtype
+        if not np.issubdtype(dt, np.floating):
+            raise InvalidInputError(
+                f"{name}: {field} must be real floating point, got dtype "
+                f"{dt}", field=field)
+    if check_finite:
+        _check_finite(d, "d")
+        if n > 1:
+            _check_finite(e, "e")
+    return d, e
+
+
+# Equilibration thresholds.  The Sturm/secular recurrences square the
+# off-diagonals, so the working range is the square root of the dtype's:
+# any Gershgorin scale outside [2^-500, 2^500] (f64: overflow at 2^1024,
+# e**2 overflow at 2^512) is scaled by an exact power of two to ~1.
+# f32 ranges are narrower (e**2 overflows at 2^64), hence per-dtype.
+_SAFE_EXP = {np.dtype(np.float64): 500, np.dtype(np.float32): 60,
+             np.dtype(np.float16): 6}
+
+
+def _safe_exponent(dtype) -> int:
+    return _SAFE_EXP.get(np.dtype(dtype), 500)
+
+
+def equilibrate(d, e):
+    """Overflow/underflow-safe scaling of (d, e) -- LAPACK's orgnrm guard.
+
+    Computes the problem's scale ``orgnrm = max(|d|, |e|)`` host-side.
+    When it lies inside the dtype's safe range (almost all traffic), the
+    INPUT ARRAYS ARE RETURNED UNTOUCHED with ``scale == 1.0`` -- the
+    guarded path is bit-identical to the unguarded one.  Otherwise (d, e)
+    are multiplied by an exact power of two bringing orgnrm to ~1, so
+
+      * ``e**2`` and ``d**2 + e**2`` can neither overflow nor underflow
+        inside the tree / Sturm sweeps, and
+      * eigenvalues of the scaled problem are EXACTLY ``scale * lam``
+        (power-of-two scaling is exact in binary FP barring over/
+        underflow of individual entries -- which the scale choice
+        precludes), so the caller's inverse scaling ``lam / scale``
+        reproduces the mathematically correct spectrum with no extra
+        rounding.
+
+    Returns ``(d_scaled, e_scaled, scale)``; callers divide output
+    eigenvalues by ``scale``.  Boundary rows (eigenvector entries) are
+    scale-invariant and need no correction.  All-zero problems return
+    untouched (nothing to protect).
+    """
+    dh = np.asarray(d) if not _is_jax_array(d) else d
+    eh = np.asarray(e) if not _is_jax_array(e) else e
+    if _is_jax_array(dh) or _is_jax_array(eh):
+        import jax.numpy as jnp
+        dmax = float(jnp.max(jnp.abs(dh)))
+        emax = float(jnp.max(jnp.abs(eh))) if np.shape(eh)[-1] else 0.0
+    else:
+        dmax = float(np.max(np.abs(dh)))
+        emax = float(np.max(np.abs(eh))) if eh.shape[-1] else 0.0
+    orgnrm = max(dmax, emax)
+    dtype = np.dtype(dh.dtype) if not _is_jax_array(dh) else np.dtype(
+        dh.dtype.name)
+    safe = _safe_exponent(dtype)
+    if orgnrm == 0.0 or 2.0 ** -safe <= orgnrm <= 2.0 ** safe:
+        return d, e, 1.0
+    # Exact power-of-two factor bringing orgnrm into [0.5, 1).
+    scale = 2.0 ** -(math.frexp(orgnrm)[1])
+    s = dtype.type(scale)
+    return d * s, e * s, float(scale)
+
+
+def robustness_counters() -> dict:
+    """Process-wide robustness counter snapshot (joined into
+    ``plan_cache_stats`` so dashboards get one view)."""
+    return {"degradations": DEGRADATIONS.count,
+            "deadline_expired": DEADLINES.count}
+
+
+def reset_robustness_counters() -> None:
+    DEGRADATIONS.reset()
+    DEADLINES.reset()

@@ -79,11 +79,13 @@ class CounterWindow:
     """A read-only view of a :class:`SolveCounter` since a start mark."""
 
     def __init__(self, counter: "SolveCounter", start: int,
-                 deflation_start: int = 0, refinement_start: int = 0):
+                 deflation_start: int = 0, refinement_start: int = 0,
+                 degradation_start: int = 0):
         self._counter = counter
         self._start = start
         self._deflation_start = deflation_start
         self._refinement_start = refinement_start
+        self._degradation_start = degradation_start
 
     @property
     def count(self) -> int:
@@ -107,6 +109,25 @@ class CounterWindow:
             s[1] += total
         return {level: s[0] / s[1] for level, s in sorted(acc.items())
                 if s[1] > 0}
+
+    @property
+    def degradation_stats(self) -> dict:
+        """Graceful-degradation gauge, aggregated over the window.
+
+        Every ladder escalation (mixed -> native, native -> bisect, ...)
+        is recorded unconditionally -- escalations are rare by design and
+        each one matters operationally.  Returns ``events`` (escalation
+        count), ``lanes`` (total eigenvalue lanes recomputed), and
+        ``by_transition`` mapping ``"from->to"`` to its event count.
+        """
+        events = self._counter.degradation_events(self._degradation_start)
+        by: dict[str, int] = {}
+        for frm, to, lanes in events:
+            key = f"{frm}->{to}"
+            by[key] = by.get(key, 0) + 1
+        return {"events": len(events),
+                "lanes": sum(e[2] for e in events),
+                "by_transition": by}
 
     @property
     def refinement_stats(self) -> dict:
@@ -161,6 +182,7 @@ class SolveCounter:
         self._deflation_depth = 0
         self._refinement: list[tuple[int, int, int, int]] = []
         self._refinement_depth = 0
+        self._degradation: list[tuple[str, str, int]] = []
 
     @property
     def count(self) -> int:
@@ -212,11 +234,40 @@ class SolveCounter:
         with self._lock:
             return list(self._refinement[start:])
 
+    # Bound on retained degradation events: escalations are rare, but a
+    # long-lived service under a persistent fault must not grow its
+    # metrics without limit (same policy as LatencyRecorder).
+    _DEGRADATION_MAXLEN = 4096
+
+    def record_degradation(self, frm: str, to: str, lanes: int) -> None:
+        """Record one graceful-degradation escalation: a solve stage
+        ``frm`` handed ``lanes`` eigenvalue lanes to stage ``to``.
+        Recorded unconditionally (no gate): escalations are rare and each
+        one is operationally significant."""
+        with self._lock:
+            self._degradation.append((str(frm), str(to), int(lanes)))
+            if len(self._degradation) > self._DEGRADATION_MAXLEN:
+                del self._degradation[: len(self._degradation)
+                                      - self._DEGRADATION_MAXLEN]
+
+    def degradation_events(self, start: int = 0) -> list:
+        with self._lock:
+            return list(self._degradation[start:])
+
+    def clear_degradation(self) -> None:
+        """Drop recorded escalations (``clear_plan_cache`` calls this so
+        chaos tests cannot leak ladder events into neighboring tests).
+        The trimming in record_degradation can shift event indices under
+        an open window; windows opened across a clear are void anyway."""
+        with self._lock:
+            self._degradation.clear()
+
     def reset(self) -> None:
         with self._lock:
             self._count = 0
             self._deflation.clear()
             self._refinement.clear()
+            self._degradation.clear()
 
     @contextlib.contextmanager
     def measure(self, deflation: bool = False, refinement: bool = False):
@@ -232,12 +283,13 @@ class SolveCounter:
             start = self._count
             dstart = len(self._deflation)
             rstart = len(self._refinement)
+            gstart = len(self._degradation)
             if deflation:
                 self._deflation_depth += 1
             if refinement:
                 self._refinement_depth += 1
         try:
-            yield CounterWindow(self, start, dstart, rstart)
+            yield CounterWindow(self, start, dstart, rstart, gstart)
         finally:
             if deflation or refinement:
                 with self._lock:

@@ -49,9 +49,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import br_dc as _br
+from repro.core import guard as _guard
 from repro.core import merge as _merge
 from repro.core import secular as _sec
 from repro.core.instrument import SolveCounter
+from repro.runtime import faults as _faults
 
 # Incremented once per executor *trace* (Python-level side effect inside
 # the jitted body runs only when XLA actually retraces).  Tests assert
@@ -90,9 +92,18 @@ class PlanKey(NamedTuple):
     # refine_tol * eps_f64 * ||T||.  `dtype` stays the OUTPUT dtype
     # (float64 for mixed), so the f32 tree executable is shared with
     # plain-f32 traffic of the same knobs; refine_tol is normalized to
-    # 0.0 on native routes so it never splits their cache.
+    # 0.0 on uncertified native routes so it never splits their cache.
     precision: str = "native"
     refine_tol: float = 0.0
+    # Certified solves (the robustness layer's product knob): the request
+    # finalizer runs one extra batched Sturm sweep (certify_spectrum)
+    # over the outputs and escalates misses down the degradation ladder.
+    # The flag joins the key so the serving scheduler groups certified
+    # traffic into its own flushes (one amortized sweep per flush) -- but
+    # the TREE executable is untouched: `certify` is not a static arg of
+    # `_executor`, so certified and uncertified routes of equal knobs
+    # share one compiled solve.
+    certify: bool = False
 
 
 def batch_bucket(batch: int) -> int:
@@ -177,7 +188,8 @@ def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
                         mesh="auto",
                         compress_halo: bool = False,
                         precision: str = "native",
-                        refine_tol: float | None = None) -> PlanKey:
+                        refine_tol: float | None = None,
+                        certify: bool = False) -> PlanKey:
     """Resolve a full-spectrum request to its bucketed route key -- pure.
 
     The returned :class:`PlanKey` has every request-determined field
@@ -232,10 +244,20 @@ def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
                 f"refine_tol must be positive (eps_f64 * ||T|| units), "
                 f"got {refine_tol}")
     else:
-        if refine_tol is not None:
+        if refine_tol is not None and not certify:
             raise ValueError(
-                "refine_tol only applies to precision='mixed' routes")
-        refine_tol = 0.0
+                "refine_tol only applies to precision='mixed' or "
+                "certify=True routes")
+        # Certified native routes carry the certification tolerance in the
+        # refine_tol field (same eps * ||T|| units the mixed pipeline
+        # uses); uncertified native routes normalize it to 0.0 so it never
+        # splits their cache.
+        refine_tol = (float(refine_tol if refine_tol is not None
+                            else _refine_default_tol()) if certify else 0.0)
+        if certify and refine_tol <= 0.0:
+            raise ValueError(
+                f"refine_tol must be positive (eps * ||T|| units), "
+                f"got {refine_tol}")
     if niter is None:
         niter = (_sec.DEFAULT_NITER_F32 if precision == "mixed"
                  else _sec.DEFAULT_NITER)
@@ -259,7 +281,8 @@ def resolve_solve_route(n: int, *, leaf: int = 32, chunk: int = 256,
                    resident_threshold=int(resident_threshold), fused=fused,
                    shards=shards,
                    compress_halo=bool(compress_halo) and shards > 1,
-                   precision=precision, refine_tol=refine_tol)
+                   precision=precision, refine_tol=refine_tol,
+                   certify=bool(certify))
 
 
 # Elements per streamed secular tile the CPU path aims for (~2 MiB f64):
@@ -499,6 +522,12 @@ class SolvePlan:
         else:
             d_run, e_run = d_pad, e_pad
 
+        # Chaos-harness hook: a scheduled launch fault raises here --
+        # after input staging, before any executor runs -- exactly where
+        # a real device/compile fault would surface to the caller.  The
+        # hook is one global-flag read when no schedule is configured.
+        _faults.inject("plan.launch")
+
         if key.shards > 1:
             # Distributed conquer: the *problem* axis is sharded over the
             # 1-D solver mesh (batch sharding does not compose with it --
@@ -506,6 +535,10 @@ class SolvePlan:
             mesh = _solver_mesh(key.shards)
             sliced = NamedSharding(
                 mesh, PartitionSpec(None, _dist_axis()))
+            # Chaos-harness hook: corrupts one staged off-diagonal entry
+            # (default: the last, a shard-boundary coupling) -- the "halo
+            # exchange delivered a damaged value" scenario.
+            e_run = _faults.corrupt_entry("dist.halo", e_run)
             d_run = jax.device_put(d_run, sliced)
             e_run = jax.device_put(e_run, sliced)
             if track is not None:
@@ -537,6 +570,12 @@ class SolvePlan:
                 deflate_budget=key.deflate_budget,
                 resident_threshold=key.resident_threshold, fused=key.fused)
         _br.SOLVE_COUNTER.increment()
+        # Chaos-harness hook: NaN-poisons configured eigenvalue rows ("the
+        # device returned garbage") so tests can drive the degradation
+        # ladder.  Sits BEFORE the mixed-precision refinement stage: a
+        # poisoned mixed solve exercises recovery-by-refinement, a
+        # poisoned native solve exercises the finalizer's ladder.
+        lam = _faults.poison_rows("plan.output", lam)
 
         if _br.SOLVE_COUNTER.deflation_enabled:
             # Deflation-ratio gauge (opt-in via measure(deflation=True)):
@@ -851,7 +890,8 @@ def plan_cache_stats() -> dict:
                 "range_executor_traces": RANGE_EXECUTOR_TRACES.count,
                 "range_state_bytes": sum(p.state_bytes
                                          for p in _RANGE_CACHE.values()),
-                "refine_executor_traces": _refine_traces().count}
+                "refine_executor_traces": _refine_traces().count,
+                **_guard.robustness_counters()}
 
 
 def clear_plan_cache() -> None:
@@ -863,6 +903,12 @@ def clear_plan_cache() -> None:
     monitoring) would race on counts left over from earlier traffic.
     Compiled executables stay in jax's jit cache: clearing is a
     bookkeeping reset, not a recompile.
+
+    Also clears the robustness layer's process-wide state -- the fault
+    injection schedule and its hit counters, the degradation gauge, and
+    the degradation/deadline counters -- so chaos tests can never leak a
+    fault schedule or escalation counts into neighboring tests (the same
+    isolation contract the trace counters got in PR 5).
     """
     with _PLAN_LOCK:
         _PLAN_CACHE.clear()
@@ -872,6 +918,9 @@ def clear_plan_cache() -> None:
         EXECUTOR_TRACES.reset()
         RANGE_EXECUTOR_TRACES.reset()
         _refine_traces().reset()
+    _faults.reset_faults()
+    _guard.reset_robustness_counters()
+    _br.SOLVE_COUNTER.clear_degradation()
 
 
 # Workload-spec kind aliases accepted by ``prewarm``; "solve" is the
@@ -930,6 +979,7 @@ def prewarm(workload_spec) -> dict:
             routed = route_request(SolveRequest(
                 d=d, e=e, kind=req_kind,
                 return_boundary=bool(spec.pop("return_boundary", False)),
+                certify=bool(spec.pop("certify", False)),
                 knobs=spec))
             if routed.route is not None:   # n == 1 short circuits: no plan
                 plan = plan_for_route(routed.route, batch)

@@ -35,6 +35,9 @@ from typing import Any, Mapping
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import guard as _guard
+from repro.runtime import faults as _faults
+
 KINDS = ("full", "batch", "range", "slq")
 
 METHODS = ("br", "sterf", "lazy", "full", "eigh", "bisect")
@@ -63,6 +66,24 @@ class SolveRequest:
     of the same tolerance and prewarms its own executables.  Mixed
     requests with no explicit dtype normalize to float64 (the output
     dtype) before routing.
+
+    Robustness knobs (first-class fields, not ``knobs`` entries, because
+    they apply to EVERY method):
+
+    ``certify=True`` asks for a Sturm-certified result: one extra batched
+    count sweep (``bisect.certify_spectrum``) verifies every returned
+    eigenvalue against the original (d, e) and any miss -- or non-finite
+    output -- escalates down the graceful-degradation ladder
+    (mixed -> native D&C -> per-lane Sturm bisection) before the result
+    is returned; what happened is recorded in ``SolveResult.diagnostics``
+    and the degradation gauge.  ``range``/``bisect`` solves are
+    count-verified by construction and certify for free.
+
+    ``deadline_ms`` (serve-only budget, measured from submission) fails
+    the request's future with :class:`repro.core.guard.DeadlineExceeded`
+    instead of letting it hold a flush slot past its usefulness; the sync
+    path validates but does not enforce it (there is no queueing to
+    outlive).
     """
     d: Any
     e: Any
@@ -74,18 +95,30 @@ class SolveRequest:
     iu: int | None = None
     vl: float | None = None
     vu: float | None = None
+    certify: bool = False
+    deadline_ms: float | None = None
     knobs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
 class SolveResult:
     """What comes back: eigenvalues in the kind's natural shape, plus
-    boundary rows when the request asked for them."""
+    boundary rows when the request asked for them.
+
+    ``diagnostics`` is None on the steady-state path and a small dict
+    when the robustness layer has something to report: ``certified`` /
+    ``lanes`` (certificate tally for ``certify=True``), ``escalations``
+    (tuple of ``{"from", "to", "lanes"}`` degradation-ladder records),
+    and ``equilibration_scale`` (the exact power-of-two factor applied to
+    a pathologically scaled input; eigenvalues are already inverse-scaled
+    back).
+    """
     eigenvalues: Any
     blo: Any = None
     bhi: Any = None
     kind: str = "full"
     method: str = "br"
+    diagnostics: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +142,13 @@ class RoutedRequest:
     k: int = 0
     empty: bool = False
     single: bool = False   # caller passed 1-D arrays: unwrap on the way out
+    # Equilibration factor applied to (d, e) at normalization time (an
+    # exact power of two; 1.0 for almost all traffic).  The solve runs in
+    # scaled space and the finalizer multiplies eigenvalues by 1/scale on
+    # the way out -- both exact, so scaled solves lose no accuracy.
+    # Deliberately NOT part of the route key: scale is per-problem data,
+    # and differently-scaled requests still coalesce into one flush.
+    scale: float = 1.0
 
     @property
     def return_boundary(self) -> bool:
@@ -125,12 +165,29 @@ def _as_host(x):
 
 
 def _normalize(req: SolveRequest):
-    """Validate kind/method and normalize d, e to stacked (B, n) arrays."""
+    """Validate kind/method/input and normalize d, e to stacked (B, n)
+    arrays; the guarded front door.
+
+    All structural problems -- bad shapes, non-float dtypes, NaN/Inf
+    entries, a nonsensical deadline -- raise HERE, host-side at route
+    time, as ValueError subclasses (:class:`guard.InvalidInputError` for
+    input poison), so the serving scheduler fails a malformed request's
+    own future before it can join (and poison) a coalesced flush.
+    Pathologically scaled inputs are equilibrated by an exact power of
+    two (returned as ``scale``; 1.0 -- with the input arrays untouched --
+    for in-range traffic).
+    """
     if req.kind not in KINDS:
         raise ValueError(f"unknown kind {req.kind!r}; choose from {KINDS}")
     if req.method not in METHODS:
         raise ValueError(
             f"unknown method {req.method!r}; choose from {METHODS}")
+    if req.deadline_ms is not None:
+        deadline = float(req.deadline_ms)
+        if not (deadline > 0.0) or not np.isfinite(deadline):
+            raise _guard.InvalidInputError(
+                f"deadline_ms must be a positive finite budget, got "
+                f"{req.deadline_ms!r}", field="deadline_ms")
     d = _as_host(req.d)
     e = _as_host(req.e)
     dtype = req.knobs.get("dtype")
@@ -158,7 +215,9 @@ def _normalize(req: SolveRequest):
         raise ValueError(
             f"batched solve expects d (B, n) and e (B, n-1); "
             f"got {d.shape} / {e.shape}")
-    return d, e, single
+    _guard.validate_problem(d, e, name="request")
+    d, e, scale = _guard.equilibrate(d, e)
+    return d, e, single, scale
 
 
 def _solve_knobs(req: SolveRequest) -> dict:
@@ -174,7 +233,7 @@ def route_request(req: SolveRequest) -> RoutedRequest:
     touching flushmates.
     """
     from repro.core import plan as _plan
-    d, e, single = _normalize(req)
+    d, e, single, scale = _normalize(req)
     B, n = d.shape
     kw = _solve_knobs(req)
 
@@ -196,7 +255,7 @@ def route_request(req: SolveRequest) -> RoutedRequest:
                 f"accept knobs (maxiter, polish, dtype); "
                 f"got unexpected {sorted(unknown)}")
         if req.kind == "range":
-            il, k, empty = _resolve_window(req, d, e, B, n, single)
+            il, k, empty = _resolve_window(req, d, e, B, n, single, scale)
         else:
             il, k, empty = 0, n, False   # full-spectrum bisect reference
         route = None
@@ -205,7 +264,7 @@ def route_request(req: SolveRequest) -> RoutedRequest:
                                               **range_kw)
         return RoutedRequest(request=req, d=d, e=e, batch=B, n=n,
                              route=route, il=il, k=k, empty=empty,
-                             single=single)
+                             single=single, scale=scale)
 
     if req.method == "br" and n > 1:
         return_boundary = req.return_boundary or req.kind == "slq"
@@ -218,16 +277,18 @@ def route_request(req: SolveRequest) -> RoutedRequest:
             return_boundary = return_boundary or _tree_shape(n, leaf)[1] == 0
         route = _plan.resolve_solve_route(
             n, return_boundary=return_boundary, dtype=d.dtype,
+            certify=req.certify,
             **{k: v for k, v in kw.items() if k != "dtype"})
         return RoutedRequest(request=req, d=d, e=e, batch=B, n=n,
-                             route=route, single=single)
+                             route=route, single=single, scale=scale)
 
     # Baselines (and the n == 1 short circuits): direct, uncoalescable.
     return RoutedRequest(request=req, d=d, e=e, batch=B, n=n, route=None,
-                         single=single)
+                         single=single, scale=scale)
 
 
-def _resolve_window(req: SolveRequest, d, e, B: int, n: int, single: bool):
+def _resolve_window(req: SolveRequest, d, e, B: int, n: int, single: bool,
+                    scale: float = 1.0):
     """Turn a range request's selection into an index window (il, k)."""
     from repro.core.bisect import _validate_index_range, sturm_count
     if req.select == "i":
@@ -248,14 +309,192 @@ def _resolve_window(req: SolveRequest, d, e, B: int, n: int, single: bool):
                 "use select='i'")
         # Two Sturm counts turn the value window into an index window
         # (one tiny host sync; the sliced solve then reuses the same
-        # bucketed executables as any select='i' request).
-        bounds = sturm_count(d[0], e[0],
-                             jnp.asarray([req.vl, req.vu], d.dtype))
+        # bucketed executables as any select='i' request).  (d, e) are
+        # already equilibrated, so the window endpoints scale by the same
+        # exact power of two: count(scale*v; scaled T) == count(v; T).
+        shifts = jnp.asarray([req.vl, req.vu], d.dtype)
+        if scale != 1.0:
+            shifts = shifts * jnp.asarray(scale, d.dtype)
+        bounds = sturm_count(d[0], e[0], shifts)
         c_lo, c_hi = int(bounds[0]), int(bounds[1])
         if c_hi <= c_lo:
             return 0, 0, True
         return c_lo, c_hi - c_lo, False
     raise ValueError(f"select must be 'i' or 'v', got {req.select!r}")
+
+
+def _native_knobs(req: SolveRequest) -> dict:
+    """Solver knobs for a degradation-ladder native re-solve: strip the
+    knobs that name the stage being escalated AWAY from (precision /
+    refine_tol) or that a single-problem recovery solve must not inherit
+    (mesh topology, halo compression -- the re-solve is the ladder's
+    independent second opinion, so it runs the classic single-device
+    path)."""
+    drop = ("precision", "refine_tol", "mesh", "compress_halo",
+            "return_boundary")
+    kw = {k: v for k, v in req.knobs.items() if k not in drop}
+    kw["mesh"] = None
+    return kw
+
+
+def _bisect_lanes(routed: RoutedRequest, lam_h: np.ndarray,
+                  mask: np.ndarray) -> None:
+    """Final ladder rung: re-solve the masked eigenvalue lanes by Sturm
+    bisection against the (scaled) inputs, scattering into ``lam_h``.
+
+    Bisection brackets every target with exact integer counts, so its
+    results are certified by construction -- and it runs eagerly through
+    ``bisect._slice_targets`` without touching the plan cache or the
+    fault-instrumented launch path, which is what guarantees the ladder
+    terminates even under a persistent launch-fault schedule.
+    """
+    from repro.core import bisect as _bis
+    for b in np.nonzero(mask.any(axis=1))[0]:
+        idx = np.nonzero(mask[b])[0].astype(np.int32)
+        d_b = jnp.asarray(routed.d[int(b)])[None, :]
+        e_b = jnp.asarray(routed.e[int(b)])[None, :]
+        vals = _bis._slice_targets(d_b, e_b, jnp.asarray(idx[None, :]))
+        lam_h[b, idx] = np.asarray(vals)[0]
+
+
+def _resolve_native_rows(routed: RoutedRequest, prob: np.ndarray,
+                         lam_h, blo_h, bhi_h) -> np.ndarray:
+    """Ladder rung: full native re-solve of the masked problems (the only
+    rung that can regenerate boundary rows).  Returns the mask of
+    problems that were successfully re-solved; failures (e.g. a
+    persistent injected launch fault) are left for the next rung."""
+    kw = _native_knobs(routed.request)
+    if blo_h is not None:
+        kw["return_boundary"] = True
+    done = np.zeros_like(prob)
+    for b in np.nonzero(prob)[0]:
+        try:
+            lamb, lob, hib = _solve_direct_single(
+                routed.d[int(b)], routed.e[int(b)], "br", kw)
+            lam_h[b] = np.asarray(lamb)
+            if blo_h is not None and lob is not None:
+                blo_h[b] = np.asarray(lob)
+                bhi_h[b] = np.asarray(hib)
+            done[b] = True
+        except Exception:
+            continue
+    return done
+
+
+def _finalize_lanes(routed: RoutedRequest, lam, blo, bhi, *,
+                    cert=None, check_finite: bool = True):
+    """The graceful-degradation ladder + inverse equilibration.
+
+    Shared by the sync ``execute_request`` and the serve engine's demux,
+    so both paths escalate identically (and deterministically) -- a
+    request gets the same answer whether it ran alone or in a flush.
+
+    lam/blo/bhi are the solve's stacked (B, n) outputs in SCALED space;
+    ``cert`` is an optional host (B, n) certificate mask from
+    ``certify_spectrum``.  Ladder, applied per-lane where possible:
+
+      1. non-finite outputs: full native re-solve of the affected
+         problems when the stage was mixed (escalate precision) or when
+         boundary rows are owed (bisection cannot produce rows);
+      2. lanes still bad, and any certificate misses: per-lane Sturm
+         bisection -- certified by construction, never launches through
+         the fault-instrumented plan path;
+      3. still bad (rows owed but unrecoverable): CertificationError.
+
+    Every escalation is recorded in the SOLVE_COUNTER degradation gauge
+    and the process-wide ``guard.DEGRADATIONS`` counter, and reported in
+    the returned diagnostics.  Returns (lam, blo, bhi, diagnostics).
+    """
+    from repro.core import br_dc as _br
+    req = routed.request
+    mixed = getattr(routed.route, "precision", "native") == "mixed"
+    planned = routed.route is not None
+    stage = "mixed" if mixed else ("native" if planned else req.method)
+    rows = blo is not None
+    escalations: list = []
+    cert_h = None if cert is None else np.asarray(cert).copy()
+    first_sweep_certified = (None if cert_h is None
+                             else int(cert_h.sum()))
+
+    def record(frm: str, to: str, lanes: int) -> None:
+        _br.SOLVE_COUNTER.record_degradation(frm, to, lanes)
+        _guard.DEGRADATIONS.increment()
+        escalations.append({"from": frm, "to": to, "lanes": int(lanes)})
+
+    if check_finite:
+        lam_h = np.asarray(lam)
+        bad = ~np.isfinite(lam_h)
+        if rows:
+            bad |= ~np.isfinite(np.asarray(blo)).all(axis=1, keepdims=True)
+            bad |= ~np.isfinite(np.asarray(bhi)).all(axis=1, keepdims=True)
+        if bad.any():
+            lam_h = lam_h.copy()
+            blo_h = np.asarray(blo).copy() if rows else None
+            bhi_h = np.asarray(bhi).copy() if rows else None
+            at = stage
+            if mixed or rows:
+                done = _resolve_native_rows(routed, bad.any(axis=1),
+                                            lam_h, blo_h, bhi_h)
+                if done.any():
+                    record(stage, "native", int(bad[done].sum()))
+                    at = "native"
+                bad = ~np.isfinite(lam_h)
+                if rows:
+                    bad |= ~np.isfinite(blo_h).all(axis=1, keepdims=True)
+                    bad |= ~np.isfinite(bhi_h).all(axis=1, keepdims=True)
+            if bad.any():
+                if rows:
+                    raise _guard.CertificationError(
+                        f"degradation ladder exhausted: {int(bad.sum())} "
+                        f"non-finite output lanes remain and the request "
+                        f"owes boundary rows, which bisection cannot "
+                        f"produce")
+                record(at, "bisect", int(bad.sum()))
+                _bisect_lanes(routed, lam_h, bad)
+                if cert_h is not None:
+                    cert_h[bad] = True   # count-verified by construction
+                still = ~np.isfinite(lam_h)
+                if still.any():
+                    raise _guard.CertificationError(
+                        f"degradation ladder exhausted: {int(still.sum())} "
+                        f"lanes non-finite even after Sturm bisection")
+            # Re-certify lanes repaired by a native re-solve (bisected
+            # lanes are already accounted above).
+            if cert_h is not None and not cert_h.all():
+                from repro.core import bisect as _bis
+                unchecked = (~cert_h).any(axis=1)
+                for b in np.nonzero(unchecked)[0]:
+                    c = _bis.certify_spectrum(
+                        routed.d[int(b)], routed.e[int(b)], lam_h[b],
+                        tol=getattr(routed.route, "refine_tol", 0.0)
+                        or None or _bis.DEFAULT_REFINE_TOL)
+                    cert_h[b] = np.asarray(c.certified)
+            lam, blo, bhi = lam_h, blo_h, bhi_h
+
+    if cert_h is not None and not cert_h.all():
+        miss = ~cert_h
+        lam_h = np.asarray(lam).copy()
+        record(stage, "bisect", int(miss.sum()))
+        _bisect_lanes(routed, lam_h, miss)
+        lam = lam_h
+
+    if routed.scale != 1.0:
+        # Exact inverse of the equilibration factor (a power of two), so
+        # the multiply introduces no rounding.
+        inv = np.asarray(lam).dtype.type(1.0 / routed.scale)
+        lam = lam * inv
+
+    diag = None
+    if escalations or cert_h is not None or routed.scale != 1.0:
+        diag = {}
+        if cert_h is not None:
+            diag["certified"] = first_sweep_certified
+            diag["lanes"] = int(np.asarray(cert_h).size)
+        if escalations:
+            diag["escalations"] = tuple(escalations)
+        if routed.scale != 1.0:
+            diag["equilibration_scale"] = routed.scale
+    return lam, blo, bhi, diag
 
 
 def _solve_direct_single(d, e, method: str, kw: dict):
@@ -298,19 +537,51 @@ def execute_request(req: SolveRequest | RoutedRequest) -> SolveResult:
     if isinstance(routed.route, _plan.PlanKey):
         plan = _plan.plan_for_route(routed.route, routed.batch)
         res = plan.execute(routed.d, routed.e)
+        cert = None
+        if routed.route.certify:
+            from repro.core import bisect as _bis
+            cert = _bis.certify_spectrum(
+                routed.d, routed.e, res.eigenvalues,
+                tol=routed.route.refine_tol).certified
+        # Output finiteness is only checked when something already forces
+        # a host round trip (certification, the mixed pipeline's host-
+        # driven refinement) or when the chaos harness is live: the
+        # steady-state native path keeps its async dispatch, and the
+        # front-door guard already rejected input poison, so a non-finite
+        # native output means a device fault -- which certify=True exists
+        # to catch.
+        check = (routed.route.certify or _faults.faults_enabled()
+                 or routed.route.precision == "mixed")
+        lam, blo, bhi, diag = _finalize_lanes(
+            routed, res.eigenvalues, res.blo, res.bhi, cert=cert,
+            check_finite=check)
         if single:
             return SolveResult(
-                eigenvalues=res.eigenvalues[0],
-                blo=None if res.blo is None else res.blo[0],
-                bhi=None if res.bhi is None else res.bhi[0],
-                kind=req.kind, method=req.method)
-        return SolveResult(eigenvalues=res.eigenvalues, blo=res.blo,
-                           bhi=res.bhi, kind=req.kind, method=req.method)
+                eigenvalues=lam[0],
+                blo=None if blo is None else blo[0],
+                bhi=None if bhi is None else bhi[0],
+                kind=req.kind, method=req.method, diagnostics=diag)
+        return SolveResult(eigenvalues=lam, blo=blo, bhi=bhi,
+                           kind=req.kind, method=req.method,
+                           diagnostics=diag)
     if isinstance(routed.route, _plan.RangePlanKey):
         plan = _plan.range_plan_for_route(routed.route, routed.batch)
         lam = plan.execute(routed.d, routed.e, routed.il, routed.k)
+        diag = None
+        if routed.scale != 1.0:
+            inv = np.dtype(routed.d.dtype).type(1.0 / routed.scale)
+            lam = lam * inv
+            diag = {"equilibration_scale": routed.scale}
+        if req.certify:
+            # Sturm bisection IS a certificate: every returned value is
+            # enclosed by exact integer counts, so the sweep would be
+            # redundant work -- report the tally without launching it.
+            diag = dict(diag or ())
+            diag.update(certified=int(routed.batch * routed.k),
+                        lanes=int(routed.batch * routed.k))
         return SolveResult(eigenvalues=lam[0] if single else lam,
-                           kind=req.kind, method=req.method)
+                           kind=req.kind, method=req.method,
+                           diagnostics=diag)
 
     # Direct path: baselines and n == 1 short circuits, one problem at a
     # time (these methods exist to model per-problem quadratic state).
@@ -324,9 +595,17 @@ def execute_request(req: SolveRequest | RoutedRequest) -> SolveResult:
            if outs and outs[0][1] is not None else None)
     bhi = (jnp.stack([o[2] for o in outs])
            if outs and outs[0][2] is not None else None)
+    diag = None
+    if req.certify or routed.scale != 1.0 or _faults.faults_enabled():
+        cert = None
+        if req.certify:
+            from repro.core import bisect as _bis
+            cert = _bis.certify_spectrum(routed.d, routed.e, lam).certified
+        lam, blo, bhi, diag = _finalize_lanes(routed, lam, blo, bhi,
+                                              cert=cert)
     if single:
         lam = lam[0]
         blo = None if blo is None else blo[0]
         bhi = None if bhi is None else bhi[0]
     return SolveResult(eigenvalues=lam, blo=blo, bhi=bhi, kind=req.kind,
-                       method=req.method)
+                       method=req.method, diagnostics=diag)

@@ -1,5 +1,11 @@
 from repro.runtime.watchdog import Watchdog
 from repro.runtime.straggler import StragglerMonitor
 from repro.runtime.retry import retry_transient
+from repro.runtime.faults import (FaultSpec, InjectedDeterministicError,
+                                  InjectedTransientError, configure_faults,
+                                  fault_stats, faults_enabled, reset_faults)
 
-__all__ = ["StragglerMonitor", "Watchdog", "retry_transient"]
+__all__ = ["FaultSpec", "InjectedDeterministicError",
+           "InjectedTransientError", "StragglerMonitor", "Watchdog",
+           "configure_faults", "fault_stats", "faults_enabled",
+           "reset_faults", "retry_transient"]

@@ -29,6 +29,15 @@ from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import CoalescingScheduler, ServeConfig
 
 
+def _robust_kw(knobs: dict) -> dict:
+    """Lift the robustness knobs out of **knobs into their SolveRequest
+    fields (they are request attributes, not solver knobs): ``certify``
+    joins the route key so certified requests coalesce together;
+    ``deadline_ms`` arms the engine's expiry checks."""
+    return {"certify": bool(knobs.pop("certify", False)),
+            "deadline_ms": knobs.pop("deadline_ms", None)}
+
+
 class EigensolverClient:
     """Owns one scheduler + engine pair; thread-safe for any number of
     submitting threads.  Construction knobs mirror :class:`ServeConfig`;
@@ -60,7 +69,8 @@ class EigensolverClient:
                     return_boundary: bool = False, **knobs) -> Future:
         return self.submit(SolveRequest(
             d=d, e=e, kind="full", method=method,
-            return_boundary=return_boundary, knobs=knobs))
+            return_boundary=return_boundary, **_robust_kw(knobs),
+            knobs=knobs))
 
     def solve(self, d, e, method: str = "br", **knobs):
         """All eigenvalues of one problem -- the service's sync mirror of
@@ -72,7 +82,8 @@ class EigensolverClient:
                           return_boundary: bool = False, **knobs) -> Future:
         return self.submit(SolveRequest(
             d=d, e=e, kind="batch", method=method,
-            return_boundary=return_boundary, knobs=knobs))
+            return_boundary=return_boundary, **_robust_kw(knobs),
+            knobs=knobs))
 
     def solve_batch(self, d, e, method: str = "br",
                     return_boundary: bool = False, **knobs) -> SolveResult:
@@ -86,7 +97,7 @@ class EigensolverClient:
                           iu=None, vl=None, vu=None, **knobs) -> Future:
         return self.submit(SolveRequest(
             d=d, e=e, kind="range", select=select, il=il, iu=iu, vl=vl,
-            vu=vu, knobs=knobs))
+            vu=vu, **_robust_kw(knobs), knobs=knobs))
 
     def solve_range(self, d, e, *, select: str = "i", il=None, iu=None,
                     vl=None, vu=None, **knobs):

@@ -37,11 +37,14 @@ import time
 from concurrent.futures import InvalidStateError
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import guard as _guard
 from repro.core import plan as _plan
-from repro.core.request import SolveResult, execute_request
+from repro.core.request import SolveResult, _finalize_lanes, execute_request
 from repro.runtime import StragglerMonitor, Watchdog, retry_transient
+from repro.runtime import faults as _faults
 from repro.runtime.retry import TRANSIENT_DEFAULT
 from repro.serve.metrics import ServeMetrics, bucket_label
 from repro.serve.scheduler import CoalescingScheduler, ServeConfig
@@ -103,8 +106,11 @@ def _flush_ready(flush: "_Flush") -> bool:
 
 class _Flush:
     """One staged flush: the launch inputs plus everything needed to
-    demux device outputs back onto the member requests."""
-    __slots__ = ("batch", "route", "label", "result", "error", "t_launch")
+    demux device outputs back onto the member requests.  ``cert`` holds
+    the flush-wide certificate mask (one batched Sturm sweep over the
+    padded flush) when the route carries ``certify=True``."""
+    __slots__ = ("batch", "route", "label", "result", "error", "t_launch",
+                 "cert")
 
     def __init__(self, batch, route, label):
         self.batch = batch
@@ -113,6 +119,7 @@ class _Flush:
         self.result = None
         self.error: BaseException | None = None
         self.t_launch = 0.0
+        self.cert = None
 
 
 class ServeEngine:
@@ -182,7 +189,12 @@ class ServeEngine:
         # otherwise to notice close/drain quickly.
         timeout = 0.0 if inflight is not None else 0.05
         batch = self.scheduler.next_flush(timeout=timeout)
-        if batch is None:
+        if batch is not None:
+            # Flush assembly is the first point the engine owns the
+            # requests: fail the ones whose deadline_ms budget ran out
+            # while they were queued, so they never hold a launch slot.
+            batch = self._reap_expired(batch)
+        if not batch:
             if inflight is not None:
                 self._finish_safely(inflight)
             else:
@@ -248,10 +260,34 @@ class ServeEngine:
         flush = _Flush(batch, route, bucket_label(route))
         flush.t_launch = time.perf_counter()
         try:
+            # Chaos site "serve.stage": a delay here stalls staging (the
+            # straggler monitor and watchdog see it); an error demotes
+            # the flush to the retry/fallback path like any staging bug.
+            _faults.inject("serve.stage")
             flush.result = self._launch(flush)
         except Exception as exc:   # retried/isolated in _finish
             flush.error = exc
         return flush
+
+    def _reap_expired(self, batch):
+        now = time.monotonic()
+        live = []
+        for p in batch:
+            if p.expired(now):
+                self._fail_deadline(p, bucket_label(p.routed.route))
+            else:
+                live.append(p)
+        return live
+
+    def _fail_deadline(self, p, label: str) -> None:
+        self.metrics.record_deadline(label)
+        self.metrics.record_error(label)
+        _guard.DEADLINES.increment()
+        waited_ms = (time.monotonic() - p.submit_t) * 1e3
+        _resolve_future(p.future, exc=_guard.DeadlineExceeded(
+            f"request expired: deadline_ms="
+            f"{p.routed.request.deadline_ms:g} budget exhausted "
+            f"({waited_ms:.1f} ms since submit)"))
 
     def _launch_and_wait(self, flush: _Flush):
         result = self._launch(flush)
@@ -259,6 +295,11 @@ class ServeEngine:
         return result
 
     def _launch(self, flush: _Flush):
+        # Chaos site "serve.launch": hit once per launch *attempt*, so a
+        # count-driven schedule can fail the first dispatch and let the
+        # transient-retry relaunch succeed (or keep failing to force the
+        # per-request fallback).
+        _faults.inject("serve.launch")
         route = flush.route
         if isinstance(route, _plan.PlanKey):
             return self._launch_solve(flush)
@@ -281,8 +322,24 @@ class ServeEngine:
         d_all = np.concatenate(ds, axis=0)
         e_all = np.concatenate(es, axis=0)
         plan = _plan.plan_for_route(route, d_all.shape[0])
-        return plan.execute(d_all, e_all,
-                            orig_n=np.asarray(orig_n, np.int32))
+        res = plan.execute(d_all, e_all,
+                           orig_n=np.asarray(orig_n, np.int32))
+        if route.certify:
+            # One batched Sturm sweep certifies the WHOLE flush against
+            # the padded inputs.  Bit-equivalent to each member's sync
+            # certificate: padding is decoupled (zero couplings, sentinel
+            # rows above the Gershgorin bound) so counts at real targets
+            # are unchanged, and the executor masks sentinel rows out of
+            # the per-problem tolerance norm.  Dispatch is async -- demux
+            # materializes the mask alongside the eigenvalues.
+            from repro.core import bisect as _bis
+            lam = res.eigenvalues
+            dj = jnp.asarray(d_all)
+            ej = jnp.asarray(e_all)
+            flush.cert = _bis._certify_executor(
+                dj, ej * ej, lam, jnp.asarray(orig_n, jnp.int32),
+                jnp.asarray(route.refine_tol, dj.dtype))[0]
+        return res
 
     def _launch_range(self, flush: _Flush):
         d_all = np.concatenate([np.asarray(p.routed.d)
@@ -362,36 +419,83 @@ class ServeEngine:
             lam_all = np.asarray(res.eigenvalues)
             blo_all = None if res.blo is None else np.asarray(res.blo)
             bhi_all = None if res.bhi is None else np.asarray(res.bhi)
+            cert_all = None if flush.cert is None else np.asarray(flush.cert)
+            now = time.monotonic()
             off = 0
             for p in flush.batch:
                 r = p.routed
-                lam = lam_all[off:off + r.batch, :r.n]
-                blo = (None if blo_all is None
-                       else blo_all[off:off + r.batch, :r.n])
-                bhi = (None if bhi_all is None
-                       else bhi_all[off:off + r.batch, :r.n])
+                end = off + r.batch
+                lam = lam_all[off:end, :r.n]
+                blo = None if blo_all is None else blo_all[off:end, :r.n]
+                bhi = None if bhi_all is None else bhi_all[off:end, :r.n]
+                cert = None if cert_all is None else cert_all[off:end, :r.n]
+                off = end
+                if p.expired(now):
+                    # Post-launch deadline check: the flush finished, but
+                    # this member's budget ran out while it executed.
+                    self._fail_deadline(p, flush.label)
+                    continue
+                try:
+                    # Per-request degradation ladder -- the SAME
+                    # finalizer the sync path runs, so a request gets one
+                    # answer whether it ran alone or coalesced.  The
+                    # host transfer above already paid for the finite
+                    # check, so demux always screens for output poison.
+                    lam, blo, bhi, diag = _finalize_lanes(
+                        r, lam, blo, bhi, cert=cert, check_finite=True)
+                except Exception as exc:
+                    # A member whose ladder is exhausted fails ALONE; its
+                    # flushmates keep demuxing.
+                    self.metrics.record_error(flush.label)
+                    _resolve_future(p.future, exc=exc)
+                    continue
+                if diag and diag.get("escalations"):
+                    self.metrics.record_degradation(
+                        flush.label,
+                        lanes=sum(ev["lanes"]
+                                  for ev in diag["escalations"]))
                 if r.request.kind == "full":
                     lam = lam[0]
                     blo = None if blo is None else blo[0]
                     bhi = None if bhi is None else bhi[0]
                 _resolve_future(p.future, SolveResult(
                     eigenvalues=lam, blo=blo, bhi=bhi,
-                    kind=r.request.kind, method=r.request.method))
-                off += r.batch
+                    kind=r.request.kind, method=r.request.method,
+                    diagnostics=diag))
         elif isinstance(route, _plan.RangePlanKey):
             lam_all = np.asarray(flush.result)
+            now = time.monotonic()
             off = 0
             for p in flush.batch:
                 r = p.routed
                 lam = lam_all[off:off + r.batch, :r.k]
+                off += r.batch
+                if p.expired(now):
+                    self._fail_deadline(p, flush.label)
+                    continue
+                diag = None
+                if r.scale != 1.0:
+                    inv = np.dtype(lam.dtype).type(1.0 / r.scale)
+                    lam = lam * inv
+                    diag = {"equilibration_scale": r.scale}
+                if r.request.certify:
+                    # Bisection brackets every value with exact integer
+                    # counts: certified by construction, no sweep needed
+                    # (mirrors the sync range path).
+                    diag = dict(diag or ())
+                    diag.update(certified=int(r.batch * r.k),
+                                lanes=int(r.batch * r.k))
                 if r.single:
                     lam = lam[0]
                 _resolve_future(p.future, SolveResult(
                     eigenvalues=lam, kind=r.request.kind,
-                    method=r.request.method))
-                off += r.batch
+                    method=r.request.method, diagnostics=diag))
         else:
-            _resolve_future(flush.batch[0].future, flush.result)
+            p = flush.batch[0]
+            if p.expired(time.monotonic()):
+                self._fail_deadline(p, flush.label)
+            else:
+                _resolve_future(p.future, flush.result)
 
     def _fallback(self, flush: _Flush) -> None:
         """Flush-level failure: isolate it -- re-run each member through
@@ -399,6 +503,9 @@ class ServeEngine:
         self.metrics.record_fallback(flush.label)
         for p in flush.batch:
             if p.future.done():   # partial demux already resolved it
+                continue
+            if p.expired(time.monotonic()):
+                self._fail_deadline(p, flush.label)
                 continue
             try:
                 result = execute_request(p.routed)

@@ -34,7 +34,9 @@ def bucket_label(route) -> str:
 
 class _Bucket:
     __slots__ = ("requests", "problems", "flushes", "flushed_problems",
-                 "errors", "fallbacks", "retries", "latency", "flush_time")
+                 "errors", "fallbacks", "retries", "degradations",
+                 "degraded_lanes", "deadline_expired", "latency",
+                 "flush_time")
 
     def __init__(self):
         self.requests = 0          # submitted requests
@@ -44,6 +46,9 @@ class _Bucket:
         self.errors = 0            # requests whose future got an exception
         self.fallbacks = 0         # flushes that fell back to singles
         self.retries = 0           # transient-error relaunches
+        self.degradations = 0      # requests escalated down the ladder
+        self.degraded_lanes = 0    # eigenvalue lanes recomputed by it
+        self.deadline_expired = 0  # requests failed with DeadlineExceeded
         self.latency = LatencyRecorder()     # per-request submit->demux, s
         self.flush_time = LatencyRecorder()  # per-flush device wall, s
 
@@ -95,6 +100,17 @@ class ServeMetrics:
         with self._lock:
             b.retries += 1
 
+    def record_degradation(self, label: str, lanes: int = 1) -> None:
+        b = self._bucket(label)
+        with self._lock:
+            b.degradations += 1
+            b.degraded_lanes += lanes
+
+    def record_deadline(self, label: str, n: int = 1) -> None:
+        b = self._bucket(label)
+        with self._lock:
+            b.deadline_expired += n
+
     def snapshot(self) -> dict:
         """Per-bucket stats + the process-wide plan-cache counters.
 
@@ -116,6 +132,9 @@ class ServeMetrics:
                     "errors": b.errors,
                     "fallbacks": b.fallbacks,
                     "retries": b.retries,
+                    "degradations": b.degradations,
+                    "degraded_lanes": b.degraded_lanes,
+                    "deadline_expired": b.deadline_expired,
                     "coalesce_factor": (b.flushed_problems / flushes
                                         if flushes else 0.0),
                 }

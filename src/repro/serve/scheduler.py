@@ -54,14 +54,26 @@ class ServeConfig:
 
 @dataclasses.dataclass
 class PendingRequest:
-    """One queued request: its route, its future, and its clock."""
+    """One queued request: its route, its future, and its clocks.
+
+    ``deadline_t`` is the absolute monotonic instant the request's
+    ``deadline_ms`` budget runs out (None: no deadline).  The engine --
+    not the scheduler -- enforces it, failing expired requests with
+    :class:`repro.core.guard.DeadlineExceeded` at flush assembly (so an
+    expired request never holds a launch slot) and again at demux (so a
+    slow flush cannot resolve a request past its budget).
+    """
     routed: RoutedRequest
     future: Future
     submit_t: float
+    deadline_t: float | None = None
 
     @property
     def problems(self) -> int:
         return self.routed.batch
+
+    def expired(self, now: float) -> bool:
+        return self.deadline_t is not None and now >= self.deadline_t
 
 
 class SchedulerClosed(RuntimeError):
@@ -129,8 +141,11 @@ class CoalescingScheduler:
                 return future
             key = routed.route if routed.route is not None \
                 else ("direct", id(future))
+            now = time.monotonic()
+            deadline_t = (None if request.deadline_ms is None
+                          else now + request.deadline_ms * 1e-3)
             self._groups.setdefault(key, []).append(
-                PendingRequest(routed, future, time.monotonic()))
+                PendingRequest(routed, future, now, deadline_t))
             self._pending += routed.batch
             self.peak_pending = max(self.peak_pending, self._pending)
             self.metrics.record_submit(label, routed.batch)

@@ -1,0 +1,412 @@
+"""Chaos suite: deterministic fault injection against the solve and
+serve stacks (marker: ``chaos``).
+
+The properties this file pins, per ISSUE 8:
+
+  * every submitted future RESOLVES under every fault schedule (no hung
+    clients, ever);
+  * a fault scoped to one request never harms a flushmate -- the others'
+    answers stay bit-identical to their fault-free solves;
+  * escalations land in ``SolveResult.diagnostics``, the SOLVE_COUNTER
+    degradation gauge, and the serve metrics;
+  * transient faults consume the retry budget, deterministic faults
+    skip it (straight to per-request fallback);
+  * with injection disabled the harness is invisible: outputs are
+    bit-identical to a build that never imported it.
+
+Determinism: the registry is count-driven (per-site hit counters), so
+the same traffic against the same schedule injects the same faults --
+each test re-runs exactly.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (SOLVE_COUNTER, SolveRequest, clear_plan_cache,
+                        eigvalsh_tridiagonal, execute_request,
+                        plan_cache_stats)
+from repro.core import guard as _guard
+from repro.runtime import (FaultSpec, InjectedDeterministicError,
+                           InjectedTransientError, configure_faults,
+                           fault_stats, faults_enabled, reset_faults)
+from repro.serve import EigensolverClient
+
+pytestmark = pytest.mark.chaos
+
+DEVICES = jax.device_count()
+
+
+@pytest.fixture(autouse=True)
+def _clean_slate():
+    # clear_plan_cache resets the fault registry AND the robustness
+    # counters on both sides of every test: no schedule or escalation
+    # tally may leak between tests (or into other files).
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+    assert not faults_enabled()
+
+
+def _problem(n, seed=0):
+    rng = np.random.default_rng(seed + n)
+    return rng.normal(size=n), rng.normal(size=n - 1)
+
+
+def _problems(n, count, seed=0):
+    return [_problem(n, seed=seed + 17 * i) for i in range(count)]
+
+
+# ------------------------------------------------- registry determinism
+
+
+def test_registry_is_count_driven_and_deterministic():
+    schedule = [FaultSpec(site="plan.launch", kind="error", times=(1,),
+                          error="transient")]
+    d, e = _problem(32)
+
+    def run():
+        clear_plan_cache()
+        configure_faults(schedule)
+        outcomes = []
+        for _ in range(3):
+            try:
+                lam = np.asarray(eigvalsh_tridiagonal(d, e))
+                outcomes.append(("ok", lam))
+            except InjectedTransientError:
+                outcomes.append(("fault", None))
+        stats = fault_stats()
+        reset_faults()
+        return outcomes, stats
+
+    first, stats1 = run()
+    second, stats2 = run()
+    # Hit 1 (the second launch) faults; hits 0 and 2 succeed -- every run.
+    assert [o[0] for o in first] == ["ok", "fault", "ok"]
+    assert [o[0] for o in second] == ["ok", "fault", "ok"]
+    np.testing.assert_array_equal(first[0][1], second[0][1])
+    assert stats1["hits"] == stats2["hits"]
+    assert stats1["fired"] == stats2["fired"] == {"plan.launch": 1}
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(site="plan.launch", kind="explode")
+    with pytest.raises(ValueError):
+        FaultSpec(site="plan.launch", error="sometimes")
+
+
+def test_env_var_schedule(monkeypatch):
+    monkeypatch.setenv(
+        "REPRO_FAULTS",
+        '[{"site": "plan.launch", "kind": "error", "times": [0],'
+        ' "error": "deterministic"}]')
+    configure_faults()
+    d, e = _problem(24)
+    with pytest.raises(InjectedDeterministicError):
+        eigvalsh_tridiagonal(d, e)
+    lam = np.asarray(eigvalsh_tridiagonal(d, e))   # next hit: clean
+    reset_faults()
+    np.testing.assert_array_equal(lam,
+                                  np.asarray(eigvalsh_tridiagonal(d, e)))
+
+
+# ------------------------------------------- disabled => bit-identical
+
+
+def test_disabled_harness_is_bit_invisible():
+    d, e = _problem(64)
+    D = np.stack([d, d * 1.5])
+    E = np.stack([e, e * 1.5])
+    baseline = np.asarray(eigvalsh_tridiagonal(D, E))
+    # Arm a schedule, burn it, reset -- then re-solve: the hooks are in
+    # the path both times, the bits must not notice.
+    configure_faults([FaultSpec(site="plan.output", kind="nan",
+                                times=(0,))])
+    eigvalsh_tridiagonal(D, E)
+    reset_faults()
+    np.testing.assert_array_equal(np.asarray(eigvalsh_tridiagonal(D, E)),
+                                  baseline)
+
+
+def test_disabled_harness_serve_bit_identical_to_sync():
+    probs = _problems(48, 4)
+    refs = [np.asarray(eigvalsh_tridiagonal(d, e)) for d, e in probs]
+    with EigensolverClient(max_wait_us=20000) as client:
+        futs = [client.solve_async(d, e) for d, e in probs]
+        res = [f.result(timeout=120) for f in futs]
+    for r, ref in zip(res, refs):
+        np.testing.assert_array_equal(np.asarray(r.eigenvalues), ref)
+        assert r.diagnostics is None
+
+
+# ------------------------------------------------------ sync escalation
+
+
+def test_output_poison_escalates_and_is_recorded():
+    d, e = _problem(48)
+    ref = np.asarray(eigvalsh_tridiagonal(d, e))
+    gstart = len(SOLVE_COUNTER.degradation_events())
+    configure_faults([FaultSpec(site="plan.output", kind="nan", times=(0,),
+                                lane=0, width=1)])
+    res = execute_request(SolveRequest(d=d, e=e))
+    reset_faults()
+    lam = np.asarray(res.eigenvalues)
+    # Recovered through the ladder: certified-by-construction bisection.
+    np.testing.assert_allclose(lam, ref, rtol=0,
+                               atol=1e-11 * np.max(np.abs(ref)))
+    esc = res.diagnostics["escalations"]
+    assert esc == ({"from": "native", "to": "bisect", "lanes": 48},)
+    events = SOLVE_COUNTER.degradation_events(gstart)
+    assert ("native", "bisect", 48) in events
+    assert plan_cache_stats()["degradations"] == 1
+
+
+def test_poison_with_certify_repairs_and_recertifies():
+    d, e = _problem(48)
+    configure_faults([FaultSpec(site="plan.output", kind="nan", times=(0,),
+                                lane=0, width=1)])
+    res = execute_request(SolveRequest(d=d, e=e, certify=True))
+    reset_faults()
+    diag = res.diagnostics
+    assert diag["escalations"]
+    assert diag["lanes"] == 48
+    ref = np.asarray(eigvalsh_tridiagonal(d, e))
+    np.testing.assert_allclose(np.asarray(res.eigenvalues), ref, rtol=0,
+                               atol=1e-11 * np.max(np.abs(ref)))
+
+
+def test_mixed_precision_poison_escalates_to_native():
+    d, e = _problem(96)
+    ref = np.asarray(eigvalsh_tridiagonal(d, e))
+    configure_faults([FaultSpec(site="plan.output", kind="nan", times=(0,),
+                                lane=0, width=1)])
+    res = execute_request(SolveRequest(d=d, e=e,
+                                       knobs={"precision": "mixed"}))
+    reset_faults()
+    np.testing.assert_allclose(np.asarray(res.eigenvalues), ref, rtol=0,
+                               atol=64 * np.finfo(np.float64).eps
+                               * np.max(np.abs(ref)))
+    frm = [ev["from"] for ev in res.diagnostics["escalations"]]
+    assert "mixed" in frm
+
+
+def test_sync_launch_fault_surfaces_to_caller():
+    # The SYNC path has no retry budget: a launch fault is the caller's
+    # to handle (the serve path is where retries live).
+    d, e = _problem(32)
+    configure_faults([FaultSpec(site="plan.launch", kind="error",
+                                times=(0,), error="transient")])
+    with pytest.raises(InjectedTransientError):
+        eigvalsh_tridiagonal(d, e)
+    reset_faults()
+
+
+def test_poison_only_harms_the_poisoned_lane_of_a_batch():
+    probs = _problems(40, 3)
+    D = np.stack([p[0] for p in probs])
+    E = np.stack([p[1] for p in probs])
+    ref = np.asarray(eigvalsh_tridiagonal(D, E))
+    configure_faults([FaultSpec(site="plan.output", kind="nan", times=(0,),
+                                lane=1, width=1)])
+    res = execute_request(SolveRequest(d=D, e=E, kind="batch"))
+    reset_faults()
+    lam = np.asarray(res.eigenvalues)
+    # Untouched lanes: bit-identical.  Poisoned lane: recovered.
+    np.testing.assert_array_equal(lam[0], ref[0])
+    np.testing.assert_array_equal(lam[2], ref[2])
+    np.testing.assert_allclose(lam[1], ref[1], rtol=0,
+                               atol=1e-11 * np.max(np.abs(ref)))
+
+
+# ----------------------------------------------------- serve chaos
+
+
+def test_serve_flushmates_survive_a_poisoned_member():
+    probs = _problems(48, 3, seed=5)
+    refs = [np.asarray(eigvalsh_tridiagonal(d, e)) for d, e in probs]
+    clear_plan_cache()
+    configure_faults([FaultSpec(site="plan.output", kind="nan", times=(0,),
+                                lane=1, width=1)])
+    with EigensolverClient(max_wait_us=50000) as client:
+        futs = [client.solve_async(d, e) for d, e in probs]
+        res = [f.result(timeout=120) for f in futs]
+        snap = client.metrics()
+    reset_faults()
+    poisoned = [i for i, r in enumerate(res)
+                if r.diagnostics and r.diagnostics.get("escalations")]
+    assert len(poisoned) == 1      # exactly one member escalated...
+    for i, (r, ref) in enumerate(zip(res, refs)):
+        lam = np.asarray(r.eigenvalues)
+        if i in poisoned:
+            np.testing.assert_allclose(lam, ref, rtol=0,
+                                       atol=1e-11 * np.max(np.abs(ref)))
+        else:                      # ...and the others never noticed
+            np.testing.assert_array_equal(lam, ref)
+    bucket = snap["buckets"]["solve/N64/float64"]
+    assert bucket["degradations"] == 1
+    assert bucket["degraded_lanes"] == 48
+    assert bucket["fallbacks"] == 0
+    assert snap["plan_cache"]["degradations"] >= 1
+
+
+def test_serve_transient_launch_fault_retries_within_budget():
+    probs = _problems(48, 3, seed=9)
+    refs = [np.asarray(eigvalsh_tridiagonal(d, e)) for d, e in probs]
+    clear_plan_cache()
+    configure_faults([FaultSpec(site="serve.launch", kind="error",
+                                times=(0,), error="transient")])
+    with EigensolverClient(max_wait_us=50000, retries=1,
+                           retry_backoff_s=0.01) as client:
+        futs = [client.solve_async(d, e) for d, e in probs]
+        res = [f.result(timeout=120) for f in futs]
+        snap = client.metrics()
+    reset_faults()
+    for r, ref in zip(res, refs):
+        np.testing.assert_array_equal(np.asarray(r.eigenvalues), ref)
+    bucket = snap["buckets"]["solve/N64/float64"]
+    assert bucket["retries"] == 1      # one relaunch fixed it
+    assert bucket["fallbacks"] == 0
+    assert bucket["errors"] == 0
+
+
+def test_serve_deterministic_fault_skips_retry_falls_back():
+    probs = _problems(48, 3, seed=13)
+    refs = [np.asarray(eigvalsh_tridiagonal(d, e)) for d, e in probs]
+    clear_plan_cache()
+    configure_faults([FaultSpec(site="serve.launch", kind="error",
+                                times=(), error="deterministic")])
+    with EigensolverClient(max_wait_us=50000, retries=3,
+                           retry_backoff_s=0.01) as client:
+        futs = [client.solve_async(d, e) for d, e in probs]
+        res = [f.result(timeout=240) for f in futs]
+        snap = client.metrics()
+    reset_faults()
+    for r, ref in zip(res, refs):   # fallback solves each member alone
+        np.testing.assert_array_equal(np.asarray(r.eigenvalues), ref)
+    bucket = snap["buckets"]["solve/N64/float64"]
+    assert bucket["retries"] == 0      # ValueError class: no relaunch
+    assert bucket["fallbacks"] >= 1
+    assert bucket["errors"] == 0       # every future still resolved OK
+
+
+def test_serve_persistent_transient_fault_exhausts_budget_then_falls_back():
+    probs = _problems(48, 2, seed=21)
+    refs = [np.asarray(eigvalsh_tridiagonal(d, e)) for d, e in probs]
+    clear_plan_cache()
+    configure_faults([FaultSpec(site="serve.launch", kind="error",
+                                times=(), error="transient")])
+    with EigensolverClient(max_wait_us=50000, retries=2,
+                           retry_backoff_s=0.01) as client:
+        futs = [client.solve_async(d, e) for d, e in probs]
+        res = [f.result(timeout=240) for f in futs]
+        snap = client.metrics()
+    reset_faults()
+    for r, ref in zip(res, refs):
+        np.testing.assert_array_equal(np.asarray(r.eigenvalues), ref)
+    bucket = snap["buckets"]["solve/N64/float64"]
+    assert bucket["retries"] == 2      # full budget consumed
+    assert bucket["fallbacks"] >= 1    # then isolated per-request
+    assert bucket["errors"] == 0
+
+
+def test_serve_stage_delay_trips_the_straggler_monitor():
+    probs = _problems(32, 12, seed=31)
+    clear_plan_cache()
+    configure_faults([FaultSpec(site="serve.stage", kind="delay",
+                                times=(10,), delay_s=1.0)])
+    with EigensolverClient(max_wait_us=100, straggler_window=16,
+                           straggler_threshold=3.0) as client:
+        for d, e in probs:          # closed loop: one flush per request
+            client.solve(d, e)
+        mon = next((m for label, m in client.engine._stragglers.items()
+                    if label.startswith("solve/N32/")), None)
+    reset_faults()
+    stats = fault_stats()
+    assert mon is not None and len(mon.events) >= 1
+    ev = mon.events[0]
+    assert ev["duration"] >= 1.0
+
+
+def test_deadline_expires_at_flush_assembly():
+    d, e = _problem(48)
+    with EigensolverClient(max_wait_us=50000) as client:
+        fut = client.solve_async(d, e, deadline_ms=1e-3)
+        with pytest.raises(_guard.DeadlineExceeded):
+            fut.result(timeout=60)
+        snap = client.metrics()
+    bucket = snap["buckets"]["solve/N64/float64"]
+    assert bucket["deadline_expired"] == 1
+    assert snap["plan_cache"]["deadline_expired"] >= 1
+
+
+def test_deadline_expires_post_launch_flushmates_unharmed():
+    probs = _problems(48, 2, seed=41)
+    ref0 = np.asarray(eigvalsh_tridiagonal(*probs[0]))
+    clear_plan_cache()
+    # Staging stalls 0.4s: the 50ms-deadline member expires IN FLIGHT,
+    # the unbounded member still gets its (bit-identical) answer.
+    configure_faults([FaultSpec(site="serve.stage", kind="delay",
+                                times=(0,), delay_s=0.4)])
+    with EigensolverClient(max_wait_us=50000) as client:
+        f0 = client.solve_async(*probs[0])
+        f1 = client.solve_async(*probs[1], deadline_ms=50.0)
+        res0 = f0.result(timeout=120)
+        with pytest.raises(_guard.DeadlineExceeded):
+            f1.result(timeout=120)
+        snap = client.metrics()
+    reset_faults()
+    np.testing.assert_array_equal(np.asarray(res0.eigenvalues), ref0)
+    assert snap["buckets"]["solve/N64/float64"]["deadline_expired"] == 1
+
+
+def test_every_future_resolves_under_a_hostile_schedule():
+    # The umbrella invariant: a mixed storm of faults across sites, a
+    # burst of concurrent requests -- every single future must resolve
+    # (result or error), none may hang.
+    probs = _problems(48, 8, seed=77)
+    clear_plan_cache()
+    configure_faults([
+        FaultSpec(site="serve.launch", kind="error", times=(0,),
+                  error="transient"),
+        FaultSpec(site="plan.output", kind="nan", times=(1, 3), lane=0,
+                  width=2),
+        FaultSpec(site="serve.stage", kind="delay", times=(2,),
+                  delay_s=0.05),
+    ])
+    with EigensolverClient(max_wait_us=200, retries=1,
+                           retry_backoff_s=0.01) as client:
+        futs = [client.solve_async(d, e) for d, e in probs]
+        done = [f.result(timeout=240) for f in futs]
+    reset_faults()
+    assert len(done) == len(probs)
+    for r, (d, e) in zip(done, probs):
+        ref = np.asarray(eigvalsh_tridiagonal(d, e))
+        np.testing.assert_allclose(np.asarray(r.eigenvalues), ref, rtol=0,
+                                   atol=1e-11 * np.max(np.abs(ref)))
+
+
+@pytest.mark.skipif(DEVICES < 4, reason="needs >= 4 (forced host) "
+                    "devices; run under XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4")
+def test_dist_halo_corruption_is_caught_by_certification():
+    rng = np.random.default_rng(3)
+    n = 4096
+    d = rng.normal(size=n)
+    e = rng.normal(size=n - 1)
+    ref = np.asarray(eigvalsh_tridiagonal(d, e, mesh=None))
+    clear_plan_cache()
+    configure_faults([FaultSpec(site="dist.halo", kind="corrupt",
+                                times=(0,), lane=0, index=-1,
+                                value=float("nan"))])
+    res = execute_request(SolveRequest(d=d, e=e, certify=True,
+                                       knobs={"mesh": 4}))
+    reset_faults()
+    # The corrupted halo value deflates into finite-but-WRONG lanes (NaN
+    # comparisons read as deflated), which no finite screen can see --
+    # only the certification sweep against the original (d, e) catches
+    # it, and the ladder's bisection rung repairs the flagged lanes.
+    np.testing.assert_allclose(np.asarray(res.eigenvalues), ref, rtol=0,
+                               atol=1e-10 * np.max(np.abs(ref)))
+    assert res.diagnostics["escalations"]

@@ -1,0 +1,258 @@
+"""Guarded-front-door tests: input validation taxonomy, overflow-safe
+equilibration, and certification as a product knob.
+
+The load-bearing properties:
+
+  * rejection is STRUCTURED -- ``InvalidInputError`` names the offending
+    field/lane/index so a service operator can filter the poisoned lane
+    without parsing messages (and it subclasses ValueError, so existing
+    caller contracts keep holding);
+  * the guarded path is FREE when not needed -- in-range inputs pass
+    through ``equilibrate`` untouched (same objects, scale 1.0) and a
+    guarded solve is bit-identical to the unguarded seed behavior;
+  * pathological scalings are handled EXACTLY -- power-of-two scaling
+    means eigenvalues of the scaled problem are exactly ``scale * lam``,
+    so 2^±600 problems solve to the same relative accuracy as O(1) ones;
+  * ``certify=True`` works on every method and reports its tally in
+    ``SolveResult.diagnostics``.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (CertificationError, InvalidInputError, SolveRequest,
+                        certify_spectrum, clear_plan_cache, equilibrate,
+                        eigvalsh_tridiagonal, eigvalsh_tridiagonal_range,
+                        execute_request, plan_cache_stats, sturm_count,
+                        validate_problem)
+from repro.core import guard as _guard
+
+
+def _problem(n, seed=0):
+    rng = np.random.default_rng(seed + n)
+    return rng.normal(size=n), rng.normal(size=n - 1)
+
+
+# ---------------------------------------------------------- validation
+
+
+def test_nan_rejection_names_lane_and_index():
+    d = np.ones((4, 8))
+    e = np.ones((4, 7))
+    d[2, 5] = np.nan
+    with pytest.raises(InvalidInputError, match="NaN") as ei:
+        validate_problem(d, e)
+    assert ei.value.field == "d"
+    assert ei.value.lane == 2
+    assert ei.value.index == 5
+
+
+def test_inf_rejection_1d_names_index():
+    d, e = _problem(8)
+    e = e.copy()
+    e[3] = np.inf
+    with pytest.raises(InvalidInputError, match="Inf") as ei:
+        validate_problem(d, e)
+    assert ei.value.field == "e"
+    assert ei.value.lane is None
+    assert ei.value.index == 3
+
+
+def test_invalid_input_is_a_value_error():
+    assert issubclass(InvalidInputError, ValueError)
+    with pytest.raises(ValueError):
+        validate_problem(np.ones((2, 8)), np.ones((2, 3)))
+
+
+@pytest.mark.parametrize("d,e", [
+    (np.ones((2, 3, 4)), np.ones((2, 3, 3))),   # bad rank
+    (np.ones((0,)), np.ones((0,))),             # empty
+    (np.ones(8), np.ones(5)),                   # wrong e length
+    (np.ones((3, 8)), np.ones((2, 7))),         # batch mismatch
+    (np.ones(8), np.ones((2, 7))),              # rank mismatch
+    (np.arange(8), np.ones(7)),                 # integer dtype
+])
+def test_malformed_shapes_rejected(d, e):
+    with pytest.raises(InvalidInputError):
+        validate_problem(d, e)
+
+
+def test_valid_input_returned_untouched():
+    d, e = _problem(16)
+    d2, e2 = validate_problem(d, e)
+    assert d2 is d and e2 is e
+
+
+def test_route_time_rejection_before_any_launch():
+    d, e = _problem(16)
+    d = d.copy()
+    d[7] = np.nan
+    with pytest.raises(InvalidInputError) as ei:
+        execute_request(SolveRequest(d=d, e=e))
+    assert ei.value.index == 7
+
+
+def test_public_utilities_share_the_taxonomy():
+    d, e = _problem(12)
+    bad = d.copy()
+    bad[0] = np.inf
+    with pytest.raises(InvalidInputError):
+        sturm_count(bad, e, 0.0)
+    with pytest.raises(InvalidInputError):
+        sturm_count(np.ones((2, 12)), np.ones((2, 11)), 0.0)
+    with pytest.raises(InvalidInputError):
+        certify_spectrum(bad, e, np.zeros(12))
+    with pytest.raises(InvalidInputError):    # lam shape mismatch
+        certify_spectrum(d, e, np.zeros(5))
+    with pytest.raises(InvalidInputError):    # non-positive tolerance
+        certify_spectrum(d, e, np.zeros(12), tol=0.0)
+
+
+def test_deadline_ms_validation():
+    d, e = _problem(8)
+    for bad in (-1.0, 0.0, np.nan, np.inf):
+        with pytest.raises(InvalidInputError) as ei:
+            execute_request(SolveRequest(d=d, e=e, deadline_ms=bad))
+        assert ei.value.field == "deadline_ms"
+
+
+# ------------------------------------------------------- equilibration
+
+
+def test_equilibrate_passthrough_is_bit_free():
+    d, e = _problem(32)
+    d2, e2, scale = equilibrate(d, e)
+    assert scale == 1.0
+    assert d2 is d and e2 is e      # same objects: zero-copy fast path
+
+
+@pytest.mark.parametrize("exp", [600, -600])
+def test_equilibrate_extreme_scales_are_exact_powers_of_two(exp):
+    d, e = _problem(32)
+    ds, es, scale = equilibrate(d * 2.0 ** exp, e * 2.0 ** exp)
+    frac, _ = np.frexp(scale)
+    assert frac == 0.5              # scale is an exact power of two
+    # Power-of-two scaling is exact: scaled arrays equal the originals
+    # times the combined factor, bit for bit.
+    np.testing.assert_array_equal(ds, d * (2.0 ** exp * scale))
+    np.testing.assert_array_equal(es, e * (2.0 ** exp * scale))
+
+
+@pytest.mark.parametrize("exp", [600, -600])
+def test_extreme_scale_solve_matches_unit_scale(exp):
+    d, e = _problem(48)
+    ref = np.asarray(eigvalsh_tridiagonal(d, e))
+    res = execute_request(SolveRequest(d=d * 2.0 ** exp, e=e * 2.0 ** exp))
+    lam = np.asarray(res.eigenvalues) * 2.0 ** -exp
+    np.testing.assert_allclose(lam, ref, rtol=0, atol=1e-12 * np.max(
+        np.abs(ref)))
+    assert res.diagnostics["equilibration_scale"] != 1.0
+
+
+def test_f32_safe_range_is_narrower():
+    d, e = _problem(16)
+    _, _, s64 = equilibrate(d * 2.0 ** 100, e * 2.0 ** 100)
+    _, _, s32 = equilibrate((d * 2.0 ** 100).astype(np.float32),
+                            (e * 2.0 ** 100).astype(np.float32))
+    assert s64 == 1.0               # 2^100 is fine for f64 (e^2 < 2^1024)
+    assert s32 != 1.0               # but overflows f32's e^2 range
+
+
+# ------------------------------------------------------- certification
+
+
+def test_certify_spectrum_passes_true_eigenvalues():
+    d, e = _problem(64)
+    lam = np.asarray(eigvalsh_tridiagonal(d, e))
+    cert = certify_spectrum(d, e, lam)
+    assert cert.all_certified
+    assert bool(np.all(cert.lo <= lam) and np.all(lam <= cert.hi))
+
+
+def test_certify_spectrum_flags_a_wrong_value():
+    d, e = _problem(64)
+    lam = np.asarray(eigvalsh_tridiagonal(d, e)).copy()
+    lam[10] += 0.1 * (np.max(lam) - np.min(lam))
+    cert = certify_spectrum(d, e, lam)
+    assert not bool(cert.certified[10])
+    assert not cert.all_certified
+
+
+def test_certify_spectrum_batched():
+    d0, e0 = _problem(32, seed=1)
+    d1, e1 = _problem(32, seed=2)
+    D, E = np.stack([d0, d1]), np.stack([e0, e1])
+    lam = np.stack([np.asarray(eigvalsh_tridiagonal(d0, e0)),
+                    np.asarray(eigvalsh_tridiagonal(d1, e1))])
+    cert = certify_spectrum(D, E, lam)
+    assert cert.certified.shape == (2, 32)
+    assert cert.all_certified
+
+
+@pytest.mark.parametrize("method", ["br", "sterf", "bisect"])
+def test_certify_knob_works_on_every_method(method):
+    d, e = _problem(48)
+    clear_plan_cache()
+    req = SolveRequest(d=d, e=e, method=method, certify=True)
+    res = execute_request(req)
+    assert res.diagnostics["certified"] == 48
+    assert res.diagnostics["lanes"] == 48
+    ref = np.asarray(eigvalsh_tridiagonal(d, e, method=method))
+    np.testing.assert_array_equal(np.asarray(res.eigenvalues), ref)
+
+
+def test_certify_does_not_split_the_compiled_tree():
+    clear_plan_cache()
+    d, e = _problem(48)
+    eigvalsh_tridiagonal(d, e)
+    traces = plan_cache_stats()["executor_traces"]
+    eigvalsh_tridiagonal(d, e, certify=True)
+    # Certified and uncertified routes share ONE tree executable: the
+    # certify sweep is a separate jit, not a retrace of the solver.
+    assert plan_cache_stats()["executor_traces"] == traces
+
+
+def test_certified_mixed_precision_solve():
+    d, e = _problem(96)
+    lam = eigvalsh_tridiagonal(d, e, precision="mixed", certify=True)
+    ref = np.asarray(eigvalsh_tridiagonal(d, e))
+    scale = np.max(np.abs(ref))
+    np.testing.assert_allclose(np.asarray(lam), ref, rtol=0,
+                               atol=64 * np.finfo(np.float64).eps * scale)
+
+
+def test_certified_range_is_free():
+    d, e = _problem(64)
+    clear_plan_cache()
+    req = SolveRequest(d=d, e=e, kind="range", il=0, iu=7, certify=True)
+    res = execute_request(req)
+    # Bisection encloses every value with exact counts -- certified by
+    # construction, tallied without an extra sweep.
+    assert res.diagnostics["certified"] == 8
+    ref = np.asarray(eigvalsh_tridiagonal_range(d, e, il=0, iu=7))
+    np.testing.assert_array_equal(np.asarray(res.eigenvalues), ref)
+
+
+# ------------------------------------------------------------ counters
+
+
+def test_robustness_counters_in_plan_cache_stats_and_reset():
+    clear_plan_cache()
+    stats = plan_cache_stats()
+    assert stats["degradations"] == 0
+    assert stats["deadline_expired"] == 0
+    _guard.DEGRADATIONS.increment()
+    _guard.DEADLINES.increment()
+    assert plan_cache_stats()["degradations"] == 1
+    assert plan_cache_stats()["deadline_expired"] == 1
+    clear_plan_cache()
+    stats = plan_cache_stats()
+    assert stats["degradations"] == 0
+    assert stats["deadline_expired"] == 0
+
+
+def test_certification_error_class_hierarchy():
+    assert issubclass(CertificationError, RuntimeError)
+    assert issubclass(_guard.DeadlineExceeded, TimeoutError)
